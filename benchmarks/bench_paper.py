@@ -1,0 +1,124 @@
+"""Benchmarks for the paper's claims (it is a theory paper — no tables —
+so each 'table' is a complexity claim made measurable):
+
+  T1  queries + wall-time per node evaluation vs #prev-leaves M:
+      exact Alg 2 is O(M²τ) per node (Thm 2.4), sketched Alg 3 is O(Mτ)
+      (Thm 3.1).
+  T2  sketched-SSR relative error vs k  (Thm 3.4: ε ≈ 1/√(kδ)).
+  T3  SumProd engine: grouped-query wall time vs |rows| and vs the
+      materialized-join size it avoids.
+  T4  beyond-paper: frequency-domain ⊗ (O(k)) vs the paper's
+      coefficient/FFT ⊗ (O(k log k)) inside the same training run.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Arithmetic, BoostConfig, Booster, Channels, PolyFreq, SumProd,
+    TableHashes, materialize_join, predict_rows, sketch_factors,
+)
+from repro.relational.generators import star_schema
+
+
+def _timeit(fn, n=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6  # µs
+
+
+def t1_exact_vs_sketch_scaling(depths=(1, 2, 3), n_fact=400):
+    rows: List[dict] = []
+    sch = star_schema(seed=3, n_fact=n_fact, n_dim=32)
+    for depth in depths:
+        L = 2 ** depth
+        for mode in ("exact", "sketch"):
+            cfg = BoostConfig(n_trees=2, depth=depth, mode=mode, sketch_k=128)
+            b = Booster(sch, cfg)
+            t0 = time.perf_counter()
+            trees, trace = b.fit()
+            dt = time.perf_counter() - t0
+            rows.append({
+                "bench": "T1", "mode": mode, "L": L, "M": L,
+                "queries": trace.queries, "wall_s": round(dt, 2),
+            })
+    return rows
+
+
+def t2_error_vs_k(ks=(64, 128, 256, 512, 1024), n_fact=400):
+    rows = []
+    sch = star_schema(seed=5, n_fact=n_fact, n_dim=32)
+    exact_cfg = BoostConfig(n_trees=2, depth=2, mode="exact")
+    _, tre = Booster(sch, exact_cfg).fit()
+    for k in ks:
+        cfg = BoostConfig(n_trees=2, depth=2, mode="sketch", sketch_k=k, seed=11)
+        _, trs = Booster(sch, cfg).fit()
+        errs = []
+        for e, s in zip(tre.node_ssr, trs.node_ssr):
+            for tbl in e:
+                if tbl == "fact":
+                    continue
+                ee, ss = np.asarray(e[tbl]), np.asarray(s[tbl])
+                m = ee > 1.0
+                if m.any():
+                    errs.append((np.abs(ss - ee) / ee)[m])
+        err = float(np.concatenate(errs).mean())
+        rows.append({"bench": "T2", "k": k, "ssr_rel_err": round(err, 4),
+                     "inv_sqrt_k": round(1 / np.sqrt(k), 4)})
+    return rows
+
+
+def t3_engine_throughput(sizes=(1000, 4000, 16000)):
+    rows = []
+    for n in sizes:
+        sch = star_schema(seed=7, n_fact=n, n_dim=max(16, n // 16))
+        sp = SumProd(sch)
+        c3 = Channels(3)
+        f = sp.ones_factors(c3)
+        lbl = sch.labels
+        f[sch.label_table] = jnp.stack([jnp.ones_like(lbl), lbl, lbl ** 2], -1)
+        us = _timeit(jax.jit(lambda: sp(c3, f, group_by="dim0")))
+        J = materialize_join(sch)
+        rows.append({
+            "bench": "T3", "rows": n,
+            "grouped_query_us": round(us, 1),
+            "rows_per_s": int(n / (us * 1e-6)),
+            "join_rows_avoided": int(J[sch.label_column].shape[0]),
+        })
+    return rows
+
+
+def t4_freq_vs_coeff(n_fact=400, k=256):
+    rows = []
+    sch = star_schema(seed=9, n_fact=n_fact, n_dim=32)
+    for domain in ("freq", "coeff"):
+        cfg = BoostConfig(n_trees=2, depth=2, mode="sketch", sketch_k=k,
+                          sketch_domain=domain)
+        b = Booster(sch, cfg)
+        t0 = time.perf_counter()
+        trees, _ = b.fit()
+        dt = time.perf_counter() - t0
+        # also time one raw sketched grouped query
+        sem = b.sem
+        fac = sketch_factors(sch, sem, b.hashes, sch.label_table, sch.labels)
+        us = _timeit(jax.jit(lambda: b.sp(sem, fac, group_by="dim0")))
+        rows.append({"bench": "T4", "domain": domain, "k": k,
+                     "fit_wall_s": round(dt, 2),
+                     "grouped_sketch_query_us": round(us, 1)})
+    return rows
+
+
+def run_all(fast: bool = True):
+    rows = []
+    rows += t1_exact_vs_sketch_scaling(depths=(1, 2) if fast else (1, 2, 3))
+    rows += t2_error_vs_k(ks=(64, 256, 1024) if fast else (64, 128, 256, 512, 1024))
+    rows += t3_engine_throughput(sizes=(1000, 4000) if fast else (1000, 4000, 16000))
+    rows += t4_freq_vs_coeff()
+    return rows

@@ -1,0 +1,375 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ^ 512 placeholder devices, same rule as launch/dryrun.py (run standalone).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.distributed.sharding import (                    # noqa: E402
+    cache_shardings, logical_to_spec, mesh_axes, param_shardings,
+)
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import n_micro as micro_of          # noqa: E402
+from repro.models import Model                              # noqa: E402
+from repro.models import lm as LM                           # noqa: E402
+from repro.models import layers as LYR                      # noqa: E402
+from repro.optim import adamw                               # noqa: E402
+
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+``compiled.cost_analysis()`` reports per-device numbers and counts while
+bodies ONCE (measured in DESIGN.md §6), so the cost model here composes
+loop-free *pieces*, each lowered at the true sharded shapes on the true
+mesh:
+
+  train   = n_micro · [ L · layer_vjp + embed+head+loss_vjp ] + optimizer
+  prefill = L · layer_fwd + embed+head
+  decode  = L · layer_decode + embed+head
+
+Per-cell outputs: the three roofline terms (seconds), dominant term,
+MODEL_FLOPS = 6·N·D (2·N_active·D decode/prefill), useful-compute ratio,
+and estimated roofline fraction.  v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DT = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+       "f64": 8, "s8": 1, "u8": 1, "c64": 8, "s64": 8, "u64": 8}
+
+
+def collective_bytes_per_device(hlo: str) -> dict:
+    """Ring-model per-device link traffic from loop-free partitioned HLO."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    pat = re.compile(
+        r"=\s*(\w+)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter"
+        r"|all-to-all|collective-permute)[^\n]*")
+    for m in pat.finditer(hlo):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        line = m.group(0)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        size = n * _DT.get(dt, 4)
+        g = 1
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            if gm:
+                g = len(gm.group(1).split(","))
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            out[op] += size * (g - 1) / g          # size = gathered result
+        elif op == "all-reduce":
+            out[op] += 2 * size * (g - 1) / g
+        elif op == "reduce-scatter":
+            out[op] += size * (g - 1)              # size = scattered result
+        elif op == "all-to-all":
+            out[op] += size * (g - 1) / g
+        else:
+            out[op] += size
+    return out
+
+
+def piece_cost(fn, in_shardings, args, mesh, donate=()):
+    """(flops, bytes, collective seconds, hlo) for one loop-free piece."""
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_per_device(hlo)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": sum(coll.values()),
+        "coll_detail": coll,
+    }
+
+
+def _count_params(cfg, params_shape):
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe/w_" in keys and cfg.n_experts:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def measure_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 cfg_overrides=None, n_micro_override=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    model = Model(cfg)
+    shape = configs.SHAPES[shape_name]
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    la = mesh_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in la["dp"]]))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total_p, active_p = _count_params(cfg, params_shape)
+    layer_shape = jax.eval_shape(
+        lambda k: (LM.init_cross_block if cfg.is_encdec else LM.init_block)(
+            k, cfg, dt), jax.random.PRNGKey(0))
+    lshard = param_shardings(mesh, layer_shape)
+
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers + (cfg.enc_layers if cfg.is_encdec else 0)
+    win = jnp.int32(cfg.window or LYR.GLOBAL_WINDOW)
+
+    def xsharding(bsz, seq):
+        return NamedSharding(mesh, logical_to_spec(
+            mesh, ("dp", "tp", None), (bsz, seq, cfg.d_model)))
+
+    pieces = {}
+    if shape.mode == "train":
+        nm = n_micro_override or micro_of(arch, B, dp)
+        mb, seq = B // nm, (S // 2 if cfg.is_encdec else S)
+
+        # --- loop-free decomposition (inner attention/recurrence scans are
+        # while loops → counted once by cost_analysis, DESIGN.md §6):
+        #   A: one block at S0 tokens (single attn block pair inside)
+        #   P: one (S0 × S0) attention block pair alone (fwd+bwd)
+        #   layer(seq) = (seq/S0)·(A − P) + n_pairs·P
+        # n_pairs reflects the implementation's true block schedule
+        # (full nq·nk baseline; banded when a static window restricts it).
+        S0 = min(512, seq)
+        cfg0 = cfg.replace(q_chunk=S0, kv_chunk=S0, ssm_chunk=cfg.ssm_chunk)
+        x0 = jax.ShapeDtypeStruct((mb, S0, cfg.d_model), dt)
+        pos0 = jnp.zeros((mb, S0), jnp.int32)
+
+        def block_vjp(p, xx):
+            f = lambda p_, x_: LM.block_train(p_, cfg0, x_, pos0, win)[0]
+            y, vjp = jax.vjp(f, p, xx)
+            return vjp(y)
+
+        A = piece_cost(block_vjp, (lshard, xsharding(mb, S0)), (layer_shape, x0), mesh)
+        if cfg.kind == "rwkv":
+            Pp = {k: 0.0 for k in ("flops", "bytes", "coll_bytes")}
+            n_pairs = seq / S0  # recurrence is linear: A scales directly
+        else:
+            N, Kh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+            qs = jax.ShapeDtypeStruct((mb, S0, N, dh), dt)
+            ks = jax.ShapeDtypeStruct((mb, S0, Kh, dh), dt)
+
+            def attn_vjp(q, k, v):
+                f = lambda q_, k_, v_: LYR._block_attn(
+                    q_, k_, v_, pos0, pos0, True, None, S0, S0)
+                y, vjp = jax.vjp(f, q, k, v)
+                return vjp(y)
+
+            qsh = NamedSharding(mesh, logical_to_spec(
+                mesh, ("dp", None, "tp", None), (mb, S0, N, dh)))
+            ksh = NamedSharding(mesh, logical_to_spec(
+                mesh, ("dp", None, "tp", None), (mb, S0, Kh, dh)))
+            Pp = piece_cost(attn_vjp, (qsh, ksh, ksh), (qs, ks, ks), mesh)
+            nq = -(-seq // cfg.q_chunk) * (cfg.q_chunk / S0)
+            nk = -(-seq // cfg.kv_chunk) * (cfg.kv_chunk / S0)
+            if cfg.window and not cfg.global_layers:
+                nk_local = min(nk, -(-(cfg.window + cfg.q_chunk) // S0) + 1)
+                n_pairs = nq * nk_local
+            elif cfg.window:  # mixed global/local stack: weighted average
+                n_glob = len(cfg.global_layers)
+                nk_local = min(nk, -(-(cfg.window + cfg.q_chunk) // S0) + 1)
+                n_pairs = (n_glob * nq * nk
+                           + (cfg.n_layers - n_glob) * nq * nk_local) / cfg.n_layers
+            else:
+                n_pairs = nq * nk
+        pieces["block_rest"] = {
+            k: (max(A[k] - Pp.get(k, 0.0), 0.0) if k != "coll_detail" else A[k])
+            for k in A
+        }
+        pieces["attn_pair"] = Pp
+        mults_extra = {"block_rest": L * nm * (seq / S0),
+                       "attn_pair": L * nm * n_pairs}
+
+        emb_shape = jax.eval_shape(
+            lambda k: LYR.init_embed(k, cfg, dt), jax.random.PRNGKey(0))
+        eshard = param_shardings(mesh, emb_shape)
+        toks = jax.ShapeDtypeStruct((mb, seq), jnp.int32)
+
+        def emb_loss_vjp(ep, tk):
+            def f(ep_):
+                h = LYR.embed(ep_, tk)
+                logits = LYR.unembed(ep_, cfg, h[:, :-1]).astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, -1)
+                gold = jnp.take_along_axis(logits, tk[:, 1:, None], -1)[..., 0]
+                return jnp.mean(lse - gold)
+            l, vjp = jax.vjp(f, ep)
+            return vjp(jnp.ones(()))
+
+        pieces["embed_loss"] = piece_cost(
+            emb_loss_vjp,
+            (eshard, NamedSharding(mesh, logical_to_spec(mesh, ("dp", None), (mb, seq)))),
+            (emb_shape, toks), mesh)
+        mult_emb = nm
+
+        ocfg = adamw.AdamWConfig()
+        opt_shape = jax.eval_shape(partial(adamw.init, ocfg), params_shape)
+        pshard = param_shardings(mesh, params_shape)
+        oshard = adamw.OptState(
+            step=NamedSharding(mesh, P()), m=pshard, v=pshard, master=())
+        pieces["optimizer"] = piece_cost(
+            lambda p, g, o: adamw.apply(ocfg, p, g, o)[0],
+            (pshard, pshard, oshard), (params_shape, params_shape, opt_shape), mesh)
+        mults = {"embed_loss": mult_emb, "optimizer": 1, **mults_extra}
+        tokens = B * seq * (2 if cfg.is_encdec else 1)
+        model_flops = 6 * active_p * tokens
+    elif shape.mode == "prefill":
+        seq = S // 2 if cfg.is_encdec else S
+        S0 = min(512, seq)
+        cfg0 = cfg.replace(q_chunk=S0, kv_chunk=S0)
+        x0 = jax.ShapeDtypeStruct((B, S0, cfg.d_model), dt)
+        pos0 = jnp.zeros((B, S0), jnp.int32)
+        A = piece_cost(
+            lambda p, xx: LM.block_train(p, cfg0, xx, pos0, win)[0],
+            (lshard, xsharding(B, S0)), (layer_shape, x0), mesh)
+        if cfg.kind == "rwkv":
+            Pp = {k: 0.0 for k in ("flops", "bytes", "coll_bytes")}
+            n_pairs = seq / S0
+        else:
+            N, Kh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+            qs = jax.ShapeDtypeStruct((B, S0, N, dh), dt)
+            ks = jax.ShapeDtypeStruct((B, S0, Kh, dh), dt)
+            qsh = NamedSharding(mesh, logical_to_spec(
+                mesh, ("dp", None, "tp", None), (B, S0, N, dh)))
+            ksh = NamedSharding(mesh, logical_to_spec(
+                mesh, ("dp", None, "tp", None), (B, S0, Kh, dh)))
+            Pp = piece_cost(
+                lambda q, k, v: LYR._block_attn(q, k, v, pos0, pos0, True, None, S0, S0),
+                (qsh, ksh, ksh), (qs, ks, ks), mesh)
+            nq = seq / S0
+            nk = seq / S0
+            if cfg.window and cfg.global_layers:
+                n_glob = len(cfg.global_layers)
+                nk_local = min(nk, (cfg.window + S0) / S0 + 1)
+                n_pairs = (n_glob * nq * nk
+                           + (cfg.n_layers - n_glob) * nq * nk_local) / cfg.n_layers
+            elif cfg.window:
+                n_pairs = nq * min(nk, (cfg.window + S0) / S0 + 1)
+            else:
+                n_pairs = nq * nk
+        pieces["block_rest"] = {
+            k: (max(A[k] - Pp.get(k, 0.0), 0.0) if k != "coll_detail" else A[k])
+            for k in A
+        }
+        pieces["attn_pair"] = Pp
+        emb_shape = jax.eval_shape(
+            lambda k: LYR.init_embed(k, cfg, dt), jax.random.PRNGKey(0))
+        eshard = param_shardings(mesh, emb_shape)
+        toks = jax.ShapeDtypeStruct((B, seq), jnp.int32)
+        pieces["embed_loss"] = piece_cost(
+            lambda ep, tk: LYR.unembed(ep, cfg, LYR.embed(ep, tk)[:, -1:]),
+            (eshard, NamedSharding(mesh, logical_to_spec(mesh, ("dp", None), (B, seq)))),
+            (emb_shape, toks), mesh)
+        mults = {"block_rest": L * (seq / S0), "attn_pair": L * n_pairs,
+                 "embed_loss": 1}
+        model_flops = 2 * active_p * B * seq * (2 if cfg.is_encdec else 1)
+    else:  # decode
+        seq = S
+        cache_full = jax.eval_shape(
+            lambda: model.init_cache(B, seq, src_len=seq // 2 if cfg.is_encdec else 0))
+        lc0 = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), cache_full["layers"]
+        ) if model._uniform_cache else cache_full["layers"][0]
+        lcshard = cache_shardings(mesh, {"layers": lc0})["layers"]
+        x = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+        posv = jnp.full((B,), seq, jnp.int32)
+        w0 = int(np.asarray(model._layer_windows())[0])
+
+        def dec(p, lc, xx):
+            return model._decode_block(p, xx, lc, posv, w0)[0]
+
+        pieces["layer"] = piece_cost(
+            dec, (lshard, lcshard,
+                  NamedSharding(mesh, logical_to_spec(mesh, ("dp", None, None),
+                                                      (B, 1, cfg.d_model)))),
+            (layer_shape, lc0, x), mesh)
+        emb_shape = jax.eval_shape(
+            lambda k: LYR.init_embed(k, cfg, dt), jax.random.PRNGKey(0))
+        eshard = param_shardings(mesh, emb_shape)
+        toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pieces["embed_loss"] = piece_cost(
+            lambda ep, tk: LYR.unembed(ep, cfg, LYR.embed(ep, tk)),
+            (eshard, NamedSharding(mesh, logical_to_spec(mesh, ("dp", None), (B, 1)))),
+            (emb_shape, toks), mesh)
+        mults = {"layer": L, "embed_loss": 1}   # decode: no inner loops
+        model_flops = 2 * active_p * B
+
+    flops = sum(pieces[k]["flops"] * m for k, m in mults.items())
+    bytes_ = sum(pieces[k]["bytes"] * m for k, m in mults.items())
+    coll = sum(pieces[k]["coll_bytes"] * m for k, m in mults.items())
+    t_c, t_m, t_l = flops / PEAK_FLOPS, bytes_ / HBM_BW, coll / LINK_BW
+    bound = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    ideal_t = model_flops / n_dev / PEAK_FLOPS
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "pieces": pieces, "multipliers": mults,
+        "per_device": {"flops": flops, "hbm_bytes": bytes_, "coll_bytes": coll},
+        "terms_s": {"compute": t_c, "memory": t_m, "collective": t_l},
+        "bottleneck": bound[1],
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops * n_dev, 1.0),
+        "roofline_fraction": ideal_t / max(t_c, t_m, t_l),
+        "params_total": total_p, "params_active": _count_params(cfg, params_shape)[1],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all cells on the single-pod mesh (§Roofline table)")
+    ap.add_argument("--out", default="artifacts/roofline")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cells = configs.all_cells() if args.all else [(args.arch, args.shape)]
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        try:
+            rec = measure_cell(arch, shape, args.multi_pod)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            t = rec["terms_s"]
+            print(f"[ok] {tag}: compute {t['compute']*1e3:.2f}ms  "
+                  f"memory {t['memory']*1e3:.2f}ms  coll {t['collective']*1e3:.2f}ms"
+                  f"  → {rec['bottleneck']}  frac={rec['roofline_fraction']:.2f}")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            print(f"[FAIL] {tag}: {e}")
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper claim (see bench_paper.py) printed as
+``name,us_per_call,derived`` CSV rows, plus a roofline-table summary if
+dry-run/roofline artifacts exist (those are produced by the 512-device
+processes: launch/dryrun.py and benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from . import bench_paper
+
+    rows = bench_paper.run_all(fast=fast)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = r.pop("bench")
+        sub = "_".join(
+            f"{k}={v}" for k, v in r.items()
+            if k in ("mode", "L", "k", "rows", "domain")
+        )
+        us = r.get("grouped_query_us") or r.get("grouped_sketch_query_us") or (
+            r.get("wall_s", r.get("fit_wall_s", 0)) * 1e6
+        )
+        derived = {k: v for k, v in r.items()
+                   if k not in ("grouped_query_us", "grouped_sketch_query_us")}
+        print(f"{name}[{sub}],{us},{derived}")
+
+    # roofline summary (artifacts written by benchmarks/roofline.py)
+    arts = sorted(glob.glob("artifacts/roofline/*.json"))
+    if arts:
+        print("\nname,us_per_call,derived  # roofline terms per cell (derived)")
+        for p in arts:
+            r = json.load(open(p))
+            t = r["terms_s"]
+            step_us = max(t.values()) * 1e6
+            print(f"roofline[{r['arch']}|{r['shape']}|{r['mesh']}],{step_us:.1f},"
+                  f"{{'bottleneck': '{r['bottleneck']}', "
+                  f"'fraction': {r['roofline_fraction']:.3f}, "
+                  f"'useful_ratio': {r['useful_ratio']:.3f}}}")
+    if os.path.exists("artifacts/dryrun"):
+        n = len(glob.glob("artifacts/dryrun/*.json"))
+        e = len(glob.glob("artifacts/dryrun/*.err"))
+        print(f"\n# dry-run artifacts: {n} cells ok, {e} errors (see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: train boosted regression trees DIRECTLY on a relational
+database — no design-matrix materialization — exactly the paper's
+setting, then verify against the materialized-join baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BoostConfig, Booster, MaterializedBooster, materialize_join, predict_rows,
+)
+from repro.relational.generators import star_schema
+
+
+def main():
+    # A star schema: fact table (events) joined to two dimension tables.
+    # J = fact ⋈ dim0 ⋈ dim1 is never built by the relational algorithms.
+    schema = star_schema(seed=0, n_fact=2000, n_dim=64, n_dim_tables=2,
+                         feats_per_dim=2, fact_feats=2)
+    print("tables:", {t.name: t.n_rows for t in schema.tables})
+
+    # --- Algorithm 3: sketched relational boosting (the paper's headline)
+    cfg = BoostConfig(n_trees=5, depth=3, mode="sketch", sketch_k=256)
+    t0 = time.time()
+    booster = Booster(schema, cfg)
+    trees, trace = booster.fit()
+    print(f"sketched relational fit: {time.time()-t0:.1f}s, "
+          f"{trace.queries} SumProd queries")
+
+    # --- sanity: the materialized-join baseline learns the same model
+    J = materialize_join(schema)
+    X = jnp.stack([J[c] for (_, c) in schema.features], axis=1)
+    y = J[schema.label_column]
+    trees_mat = MaterializedBooster(X, y, cfg).fit()
+    p_rel = predict_rows(trees, X)
+    p_mat = predict_rows(trees_mat, X)
+    print(f"|J| = {X.shape[0]} rows (materialized only for this check)")
+    print(f"relational MSE  = {float(jnp.mean((y - p_rel) ** 2)):.4f}")
+    print(f"materialized MSE= {float(jnp.mean((y - p_mat) ** 2)):.4f}")
+    print(f"var(y)          = {float(jnp.var(y)):.4f}")
+    print(f"max |pred diff| = {float(jnp.abs(p_rel - p_mat).max()):.2e}")
+
+    # --- relational scoring: per-fact-row predictions without the join
+    tot, cnt = booster.predict_grouped(trees, "fact")
+    print("per-fact-row scores (first 5):",
+          np.round(np.asarray(tot[:5] / jnp.maximum(cnt[:5], 1)), 3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + greedy decode on the reduced MoE
+config (dbrx family) — exercises the KV cache, MoE near-dropless
+inference dispatch, and the decode step the dry-run lowers at 32k/500k.
+
+    PYTHONPATH=src python examples/serving.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "dbrx_132b", "--batch", "4",
+        "--prompt-len", "64", "--decode-tokens", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

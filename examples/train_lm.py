@@ -1,0 +1,28 @@
+"""End-to-end LM training driver on CPU: a reduced tinyllama-family model
+(~10M params) for a few hundred steps through the FULL production stack —
+pipeline → microbatched train step → watchdog → async checkpoints →
+resume.  Loss should fall well below the unigram floor.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    args = [
+        "--arch", "tinyllama_1_1b", "--steps", "300", "--batch", "8",
+        "--seq", "128", "--n-micro", "2", "--lr", "3e-3",
+        "--ckpt-dir", "/tmp/repro_lm_ckpt", "--ckpt-every", "100",
+    ]
+    # pass-through overrides (e.g. --steps 50)
+    extra = sys.argv[1:]
+    for i in range(0, len(extra) - 1, 2):
+        if extra[i] in args:
+            args[args.index(extra[i]) + 1] = extra[i + 1]
+    train.main(args)
+
+
+if __name__ == "__main__":
+    main()

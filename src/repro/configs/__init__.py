@@ -1,0 +1,84 @@
+"""Architecture registry: the 10 assigned configs + the paper's own.
+
+Every module defines ``CONFIG`` (full, exact assignment numbers) and
+``SMOKE`` (reduced same-family config for CPU tests).  ``get(name)``
+returns the full config, ``get_smoke(name)`` the reduced one.
+
+Shapes (assignment): seq_len × global_batch; decode_*/long_* lower
+``serve_step`` (one token against a seq_len KV cache).  ``long_500k``
+runs only for sub-quadratic archs (rwkv6, hymba) — skips recorded in
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "qwen2_5_32b",
+    "tinyllama_1_1b",
+    "llama3_405b",
+    "granite_3_8b",
+    "dbrx_132b",
+    "llama4_scout_17b_a16e",
+    "seamless_m4t_medium",
+    "llava_next_34b",
+    "rwkv6_1_6b",
+    "hymba_1_5b",
+]
+
+# canonical external ids → module names
+ALIASES = {
+    "qwen2.5-32b": "qwen2_5_32b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "llama3-405b": "llama3_405b",
+    "granite-3-8b": "granite_3_8b",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llava-next-34b": "llava_next_34b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str               # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ALIASES.get(name, name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ALIASES.get(name, name)}")
+    return mod.SMOKE
+
+
+def cells(arch: str) -> List[str]:
+    """Applicable shape names for an arch (assignment skip rules)."""
+    cfg = get(arch)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in cells(a)]

@@ -1,0 +1,8 @@
+"""The paper's own 'architecture': relational boosted regression trees.
+
+Selectable via --arch paper-rbrt in benchmarks/examples; hyperparameters
+mirror the paper's variables (m trees, L leaves via depth, τ tables, k)."""
+from repro.core.trainer import BoostConfig
+
+CONFIG = BoostConfig(n_trees=8, depth=4, mode="sketch", sketch_k=256)
+SMOKE = BoostConfig(n_trees=2, depth=2, mode="sketch", sketch_k=64)

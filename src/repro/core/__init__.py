@@ -1,0 +1,27 @@
+"""Core: the paper's contribution — relational boosted regression trees.
+
+Public API:
+    Schema, Table                    — relational data (schema.py)
+    SumProd, materialize_join        — query engine (sumprod.py)
+    semirings                        — Arithmetic/Channels/PolyCoeff/PolyFreq/...
+    TableHashes, sketch_factors      — tensor sketch (sketch.py)
+    Booster, BoostConfig             — Algorithms 1–3 (trainer.py)
+    MaterializedBooster              — the paper's baseline (baseline.py)
+    TreeArrays, predict_rows         — trees (tree.py)
+"""
+from .schema import NotAcyclicError, Schema, Table
+from .semiring import Arithmetic, BooleanSR, Channels, PolyCoeff, PolyFreq, Tropical
+from .sketch import Hash2, TableHashes, count_sketch_dense, sketch_factors, tensor_sketch_dense
+from .sumprod import QueryCounter, SumProd, materialize_join
+from .trainer import BoostConfig, Booster, FitTrace
+from .baseline import MaterializedBooster
+from .tree import TreeArrays, leaf_masks, predict_rows
+
+__all__ = [
+    "NotAcyclicError", "Schema", "Table",
+    "Arithmetic", "BooleanSR", "Channels", "PolyCoeff", "PolyFreq", "Tropical",
+    "Hash2", "TableHashes", "count_sketch_dense", "sketch_factors", "tensor_sketch_dense",
+    "QueryCounter", "SumProd", "materialize_join",
+    "BoostConfig", "Booster", "FitTrace", "MaterializedBooster",
+    "TreeArrays", "leaf_masks", "predict_rows",
+]

@@ -1,0 +1,100 @@
+"""Materialized-join greedy boosted trees — the paper's comparison baseline.
+
+Standard in-memory gradient boosting on the design matrix X = cols(J):
+the algorithm every library implements, and the oracle our relational
+Algorithms 1/2 must match split-for-split (tests assert prediction
+equality).  Scoring is the identical argmax(S_L²/n_L + S_R²/n_R) form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trainer import BoostConfig
+from .tree import TreeArrays
+
+
+@dataclasses.dataclass
+class MaterializedBooster:
+    X: jnp.ndarray            # (n, d) in global-feature-id order
+    y: jnp.ndarray            # (n,)
+    cfg: BoostConfig
+
+    def __post_init__(self):
+        Xn = np.asarray(self.X)
+        self._order = jnp.asarray(np.argsort(Xn, axis=0, kind="stable").T)  # (d, n)
+        self._svals = jnp.asarray(np.take_along_axis(Xn, np.asarray(self._order).T, 0).T)
+
+    def _best_split(self, idx, r, K):
+        """idx: (n,) node assignment; r: residuals.  Returns per-node best."""
+        n, d = self.X.shape
+        onehot = jax.nn.one_hot(idx, K, dtype=jnp.float32)          # (n, K)
+
+        def one_feature(fi):
+            o = self._order[fi]
+            vals = self._svals[fi]
+            oh = jnp.take(onehot, o, axis=0)                        # (n, K)
+            rs = jnp.take(r, o)
+            cn = jnp.cumsum(oh, axis=0).T                           # (K, n)
+            cs = jnp.cumsum(oh * rs[:, None], axis=0).T
+            tot_n, tot_s = cn[:, -1], cs[:, -1]
+            nl, sl = cn[:, :-1], cs[:, :-1]
+            nr, sr = tot_n[:, None] - nl, tot_s[:, None] - sl
+            valid = (vals[1:] > vals[:-1])[None] & (nl > 0) & (nr > 0)
+            score = jnp.where(
+                valid,
+                jnp.square(sl) / jnp.maximum(nl, 1e-9)
+                + jnp.square(sr) / jnp.maximum(nr, 1e-9),
+                -jnp.inf,
+            )
+            p = jnp.argmax(score, axis=1)
+            take = lambda a: jnp.take_along_axis(a, p[:, None], 1)[:, 0]
+            base = jnp.square(tot_s) / jnp.maximum(tot_n, 1e-9)
+            return (
+                take(score) - base,
+                jnp.take(vals[1:], p),
+                take(sl), take(nl), take(sr), take(nr),
+            )
+
+        res = jax.lax.map(one_feature, jnp.arange(d))
+        key = res[0] - 1e-9 * jnp.arange(d, dtype=jnp.float32)[:, None]
+        f = jnp.argmax(key, axis=0)
+        take = lambda a: jnp.take_along_axis(a, f[None], 0)[0]
+        return f.astype(jnp.int32), *(take(a) for a in res)
+
+    def fit(self) -> List[TreeArrays]:
+        cfg = self.cfg
+        trees: List[TreeArrays] = []
+        pred = jnp.zeros_like(self.y)
+        for _ in range(cfg.n_trees):
+            r = self.y - pred
+            tree = TreeArrays.empty(cfg.depth)
+            idx = jnp.zeros((self.X.shape[0],), jnp.int32)
+            node_mean = jnp.zeros((1,), jnp.float32)
+            for level in range(cfg.depth):
+                K = 2 ** level
+                f, score, thr, sl, nl, sr, nr = self._best_split(idx, r, K)
+                valid = jnp.isfinite(score) & (score > cfg.min_gain)
+                feat = jnp.where(valid, f, -1).astype(jnp.int32)
+                th = jnp.where(valid, thr, jnp.inf)
+                start = K - 1
+                tree = TreeArrays(
+                    feat=jax.lax.dynamic_update_slice_in_dim(tree.feat, feat, start, 0),
+                    thr=jax.lax.dynamic_update_slice_in_dim(tree.thr, th, start, 0),
+                    leaf=tree.leaf,
+                )
+                lm = jnp.where(valid, sl / jnp.maximum(nl, 1e-9), node_mean)
+                rm = jnp.where(valid, sr / jnp.maximum(nr, 1e-9), node_mean)
+                node_mean = jnp.stack([lm, rm], 1).reshape(-1)
+                fv = jnp.take(feat, idx)
+                tv = jnp.take(th, idx)
+                xv = jnp.take_along_axis(self.X, jnp.maximum(fv, 0)[:, None], 1)[:, 0]
+                idx = 2 * idx + ((xv >= tv) & (fv >= 0)).astype(jnp.int32)
+            tree = TreeArrays(feat=tree.feat, thr=tree.thr, leaf=cfg.lr * node_mean)
+            trees.append(tree)
+            pred = pred + jnp.take(tree.leaf, idx)
+        return trees

@@ -1,0 +1,263 @@
+"""Commutative semiring abstraction for SumProd queries.
+
+A SumProd query ``⊕_{x∈J} ⊗_f q_f(x_f)`` (paper §1.1.1) is generic over a
+commutative semiring ``(S, ⊕, ⊗)``.  Every semiring here represents an
+element of S as a jnp array whose *trailing* ``value_shape`` dims hold the
+element; leading dims are batch dims (rows, tree nodes, leaves, ...).
+
+Implemented semirings
+---------------------
+- :class:`Arithmetic`    — (R, +, ·): counts / sums / products.
+- :class:`Channels`      — (R^c, +, ⊙): c independent arithmetic channels.
+  Used to fuse the paper's three queries (count, Σy, Σy²) into one pass.
+- :class:`PolyCoeff`     — (R^k, +, ·mod z^k): the paper's tensor-sketch
+  polynomial semiring in *coefficient* space; ⊗ = circular convolution
+  (computed via FFT, the paper's O(k log k) form).
+- :class:`PolyFreq`      — rfft image of PolyCoeff; ⊗ = elementwise complex
+  product (O(k)).  Beyond-paper optimization (Pham–Pagh frequency trick):
+  sketches stay in the frequency domain end-to-end.
+- :class:`Tropical`      — (R∪{+inf}, min, +): used by property tests to
+  certify semiring-genericity of the engine (also: cheapest-join-path).
+- :class:`BooleanSR`     — ({0,1}, or, and): join emptiness tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Semiring:
+    """Base class.  Elements: arrays [..., *value_shape] of ``dtype``."""
+
+    value_shape: Tuple[int, ...] = ()
+    dtype = jnp.float32
+
+    # -- element constructors -------------------------------------------------
+    def zeros(self, batch_shape=()):
+        raise NotImplementedError
+
+    def ones(self, batch_shape=()):
+        raise NotImplementedError
+
+    # -- algebra ---------------------------------------------------------------
+    def add(self, a, b):
+        raise NotImplementedError
+
+    def mul(self, a, b):
+        raise NotImplementedError
+
+    def segment_add(self, vals, segment_ids, num_segments):
+        """⊕-reduce rows of ``vals`` (axis 0) by ``segment_ids``.
+
+        Empty segments must yield the ⊕-identity (semiring zero).
+        """
+        raise NotImplementedError
+
+    def reduce_add(self, vals, axis=0):
+        """⊕-reduce along one batch axis."""
+        raise NotImplementedError
+
+    # -- helpers ----------------------------------------------------------------
+    def _bmask(self, mask):
+        """Reshape a batch-shaped boolean mask to broadcast over value dims."""
+        return mask.reshape(mask.shape + (1,) * len(self.value_shape))
+
+    def where(self, mask, a, b):
+        return jnp.where(self._bmask(mask), a, b)
+
+    def mask(self, vals, keep):
+        """Row exclusion: masked-out rows become semiring zero (paper: a row
+        failing a J^{(v)} constraint contributes the ⊕-identity)."""
+        return self.where(keep, vals, self.zeros(keep.shape))
+
+    def scale(self, vals, scalars):
+        """Multiply semiring values by *real* scalars.  Valid whenever ⊕ is
+        ordinary + (S is then an R-module): Arithmetic/Channels/Poly/Freq."""
+        raise NotImplementedError
+
+
+class _ModuleSemiring(Semiring):
+    """Shared impl for semirings whose ⊕ is elementwise +."""
+
+    def zeros(self, batch_shape=()):
+        return jnp.zeros(tuple(batch_shape) + self.value_shape, self.dtype)
+
+    def add(self, a, b):
+        return a + b
+
+    def segment_add(self, vals, segment_ids, num_segments):
+        return jax.ops.segment_sum(vals, segment_ids, num_segments=num_segments)
+
+    def reduce_add(self, vals, axis=0):
+        return jnp.sum(vals, axis=axis)
+
+    def scale(self, vals, scalars):
+        return vals * scalars.reshape(scalars.shape + (1,) * len(self.value_shape)).astype(vals.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arithmetic(_ModuleSemiring):
+    value_shape: Tuple[int, ...] = ()
+    dtype = jnp.float32
+
+    def ones(self, batch_shape=()):
+        return jnp.ones(tuple(batch_shape), self.dtype)
+
+    def mul(self, a, b):
+        return a * b
+
+
+@dataclasses.dataclass(frozen=True)
+class Channels(_ModuleSemiring):
+    """c independent arithmetic channels: ⊗ is elementwise per channel.
+
+    The paper's node statistics (n, Σy, Σy²) are three SumProd queries whose
+    per-feature terms differ only at the label column — they fuse into one
+    pass over the (R^3, +, ⊙) product semiring.
+    """
+
+    channels: int = 3
+
+    @property
+    def value_shape(self):  # type: ignore[override]
+        return (self.channels,)
+
+    def ones(self, batch_shape=()):
+        return jnp.ones(tuple(batch_shape) + (self.channels,), self.dtype)
+
+    def mul(self, a, b):
+        return a * b
+
+
+@dataclasses.dataclass(frozen=True)
+class PolyCoeff(_ModuleSemiring):
+    """Polynomials mod z^k, coefficient representation (paper §3).
+
+    ⊗ = circular convolution, evaluated with real FFTs — the paper's
+    O(k log k) bound.  ``k`` must be even (rfft symmetry used by PolyFreq
+    round-trips).
+    """
+
+    k: int = 64
+
+    def __post_init__(self):
+        assert self.k % 2 == 0, "sketch size k must be even"
+
+    @property
+    def value_shape(self):  # type: ignore[override]
+        return (self.k,)
+
+    def ones(self, batch_shape=()):
+        # multiplicative identity: 1·z^0
+        out = jnp.zeros(tuple(batch_shape) + (self.k,), self.dtype)
+        return out.at[..., 0].set(1.0)
+
+    def mul(self, a, b):
+        fa = jnp.fft.rfft(a, n=self.k, axis=-1)
+        fb = jnp.fft.rfft(b, n=self.k, axis=-1)
+        return jnp.fft.irfft(fa * fb, n=self.k, axis=-1).astype(self.dtype)
+
+    def norm_sq(self, vals):
+        return jnp.sum(jnp.square(vals), axis=-1)
+
+    def to_freq(self, vals):
+        return jnp.fft.rfft(vals, n=self.k, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolyFreq(_ModuleSemiring):
+    """Frequency-domain image of :class:`PolyCoeff` under rfft.
+
+    Elements are the k//2+1 complex rfft coefficients.  ⊕ = + (FFT is
+    linear), ⊗ = elementwise complex multiply (convolution theorem).  The
+    monomials the sketch inserts have *analytic* transforms
+    (s·z^h ↦ s·e^{-2πi·h·j/k}), so no FFT is ever executed — each ⊗ costs
+    O(k) instead of the paper's O(k log k).  Final sketch norms use
+    Parseval (see :meth:`norm_sq`).
+    """
+
+    k: int = 64
+    dtype = jnp.complex64
+
+    def __post_init__(self):
+        assert self.k % 2 == 0
+
+    @property
+    def value_shape(self):  # type: ignore[override]
+        return (self.k // 2 + 1,)
+
+    def ones(self, batch_shape=()):
+        return jnp.ones(tuple(batch_shape) + (self.k // 2 + 1,), self.dtype)
+
+    def mul(self, a, b):
+        return a * b
+
+    def scale(self, vals, scalars):
+        return vals * scalars.reshape(scalars.shape + (1,)).astype(self.dtype)
+
+    def norm_sq(self, vals):
+        """Parseval for rfft of a real length-k signal:
+        ||x||² = (|X_0|² + 2·Σ_{0<j<k/2}|X_j|² + |X_{k/2}|²) / k."""
+        p = jnp.square(jnp.abs(vals))
+        w = jnp.concatenate(
+            [jnp.ones((1,)), 2.0 * jnp.ones((self.k // 2 - 1,)), jnp.ones((1,))]
+        ).astype(p.dtype)
+        return jnp.sum(p * w, axis=-1) / self.k
+
+    def to_coeff(self, vals):
+        return jnp.fft.irfft(vals, n=self.k, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tropical(Semiring):
+    """(R ∪ {+inf}, min, +) — min-plus."""
+
+    value_shape: Tuple[int, ...] = ()
+    dtype = jnp.float32
+
+    def zeros(self, batch_shape=()):
+        return jnp.full(tuple(batch_shape), jnp.inf, self.dtype)
+
+    def ones(self, batch_shape=()):
+        return jnp.zeros(tuple(batch_shape), self.dtype)
+
+    def add(self, a, b):
+        return jnp.minimum(a, b)
+
+    def mul(self, a, b):
+        return a + b
+
+    def segment_add(self, vals, segment_ids, num_segments):
+        return jax.ops.segment_min(vals, segment_ids, num_segments=num_segments)
+
+    def reduce_add(self, vals, axis=0):
+        return jnp.min(vals, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class BooleanSR(Semiring):
+    """({False,True}, or, and)."""
+
+    value_shape: Tuple[int, ...] = ()
+    dtype = jnp.bool_
+
+    def zeros(self, batch_shape=()):
+        return jnp.zeros(tuple(batch_shape), self.dtype)
+
+    def ones(self, batch_shape=()):
+        return jnp.ones(tuple(batch_shape), self.dtype)
+
+    def add(self, a, b):
+        return jnp.logical_or(a, b)
+
+    def mul(self, a, b):
+        return jnp.logical_and(a, b)
+
+    def segment_add(self, vals, segment_ids, num_segments):
+        return jax.ops.segment_max(vals.astype(jnp.int32), segment_ids, num_segments=num_segments).astype(jnp.bool_)
+
+    def reduce_add(self, vals, axis=0):
+        return jnp.any(vals, axis=axis)

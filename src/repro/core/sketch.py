@@ -1,0 +1,152 @@
+"""Count sketch / tensor sketch (paper §1.1.2, §3).
+
+TensorSketch(v_1 ⊙ … ⊙ v_τ) uses τ independent 2-wise hash pairs
+(h_t: [|D_t|] → [k], s_t: [|D_t|] → {±1}); the Kronecker coordinate
+ρ = (j_1..j_τ) lands in bucket H(ρ) = Σ_t h_t(j_t) mod k with sign
+Π_t s_t(j_t).  Inside a SumProd query this is exactly the polynomial
+semiring: table t contributes the monomial s_t(w)·z^{h_t(w)} and ⊗
+(circular convolution mod z^k) adds bucket indices and multiplies signs.
+
+Two representations (DESIGN.md §3):
+- coefficient space (:class:`~.semiring.PolyCoeff`) — faithful to the
+  paper's FFT cost model;
+- frequency space (:class:`~.semiring.PolyFreq`) — monomials have the
+  analytic transform s·ω^{h·j} (ω = e^{-2πi/k}), ⊗ is O(k) elementwise;
+  the classic Pham–Pagh trick, our beyond-paper optimization.
+
+Hashes are Dietzfelbinger multiply-add-shift (2-approximately universal;
+uint32 wraparound is the mod 2^32), generated from a PRNG key so the whole
+pipeline is reproducible.  Bucket counts k are powers of two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .schema import Schema
+from .semiring import PolyCoeff, PolyFreq
+
+
+@dataclasses.dataclass(frozen=True)
+class Hash2:
+    """Multiply-add-shift hash into k = 2^M buckets plus a ±1 sign hash.
+
+    h(x) = (a·x + b  mod 2^32) >> (32 - M), a odd — Dietzfelbinger et al.;
+    s(x) = top bit of an independent copy, mapped to ±1.
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    a2: jnp.ndarray
+    b2: jnp.ndarray
+    k: int
+
+    @staticmethod
+    def make(key: jax.Array, k: int) -> "Hash2":
+        assert k & (k - 1) == 0 and k > 1, "sketch size k must be a power of two"
+        ka, kb, kc, kd = jax.random.split(key, 4)
+        mk = lambda kk: jax.random.randint(kk, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32).astype(jnp.uint32)
+        return Hash2(
+            a=mk(ka) * jnp.uint32(2) + jnp.uint32(1),   # odd
+            b=mk(kb),
+            a2=mk(kc) * jnp.uint32(2) + jnp.uint32(1),
+            b2=mk(kd),
+            k=k,
+        )
+
+    @property
+    def _shift(self) -> int:
+        return 32 - int(self.k).bit_length() + 1
+
+    def bucket(self, x: jnp.ndarray) -> jnp.ndarray:
+        v = self.a * x.astype(jnp.uint32) + self.b
+        return (v >> jnp.uint32(self._shift)).astype(jnp.int32)
+
+    def sign(self, x: jnp.ndarray) -> jnp.ndarray:
+        v = self.a2 * x.astype(jnp.uint32) + self.b2
+        return (1 - 2 * (v >> jnp.uint32(31)).astype(jnp.int32)).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableHashes:
+    """One (h_t, s_t) pair per table, shared across a whole training run."""
+
+    hashes: Dict[str, Hash2]
+    k: int
+
+    @staticmethod
+    def make(key: jax.Array, schema: Schema, k: int) -> "TableHashes":
+        keys = jax.random.split(key, schema.n_tables)
+        return TableHashes(
+            hashes={t.name: Hash2.make(kk, k) for t, kk in zip(schema.tables, keys)},
+            k=k,
+        )
+
+
+def monomial_coeff(sem: PolyCoeff, signs: jnp.ndarray, buckets: jnp.ndarray):
+    """s·z^h as a dense coefficient vector (…, k)."""
+    oh = jax.nn.one_hot(buckets, sem.k, dtype=sem.dtype)
+    return oh * signs[..., None]
+
+
+def monomial_freq(sem: PolyFreq, signs: jnp.ndarray, buckets: jnp.ndarray):
+    """rfft(s·z^h) = s·exp(-2πi·h·j/k), j = 0..k/2 — analytic, no FFT."""
+    j = jnp.arange(sem.k // 2 + 1, dtype=jnp.float32)
+    ang = -2.0 * jnp.pi * buckets[..., None].astype(jnp.float32) * j / sem.k
+    return (signs[..., None] * jax.lax.complex(jnp.cos(ang), jnp.sin(ang))).astype(sem.dtype)
+
+
+def sketch_factors(
+    schema: Schema,
+    sem,
+    hashes: TableHashes,
+    weight_table: str,
+    weights: jnp.ndarray,
+):
+    """Per-table monomial factor arrays for one sketched SumProd query.
+
+    Every table t contributes s_t(w_t(row))·z^{h_t(w_t(row))}; the
+    designated ``weight_table`` additionally carries the real weight per
+    row (the label x_y for Y', or the leaf prediction d_ℓ for Ŷ'; paper
+    §3 puts F(x) on the last table — any single table works since ⊗ is
+    commutative).
+    """
+    mono = monomial_freq if isinstance(sem, PolyFreq) else monomial_coeff
+    factors = {}
+    for t in schema.tables:
+        h = hashes.hashes[t.name]
+        w = schema.w_ids[t.name]
+        m = mono(sem, h.sign(w), h.bucket(w))
+        if t.name == weight_table:
+            m = sem.scale(m, weights)
+        factors[t.name] = m
+    return factors
+
+
+# ----------------------------------------------------------------------------
+# Dense reference implementations (tests / benchmarks only)
+# ----------------------------------------------------------------------------
+
+def tensor_sketch_dense(vectors: Sequence[jnp.ndarray], hashes: Sequence[Hash2], k: int):
+    """Directly sketch an explicit Kronecker product v_1 ⊙ … ⊙ v_τ.
+
+    O(Π|D_t|) — test oracle for the SumProd-embedded sketch.
+    """
+    acc = None
+    for v, h in zip(vectors, hashes):
+        idx = jnp.arange(v.shape[0])
+        contrib = jax.ops.segment_sum(
+            v * h.sign(idx), h.bucket(idx), num_segments=k
+        )
+        f = jnp.fft.rfft(contrib, n=k)
+        acc = f if acc is None else acc * f
+    return jnp.fft.irfft(acc, n=k)
+
+
+def count_sketch_dense(vec: jnp.ndarray, h: Hash2) -> jnp.ndarray:
+    """Plain count sketch S·v of a dense vector (grad-compression oracle)."""
+    idx = jnp.arange(vec.shape[0])
+    return jax.ops.segment_sum(vec * h.sign(idx), h.bucket(idx), num_segments=h.k)

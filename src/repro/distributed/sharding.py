@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules → NamedSharding for every param/state leaf.
+
+Logical axes:
+  fsdp — parameter/optimizer sharding (ZeRO-3-style). Maps to ("pod",
+         "data") on the multi-pod mesh, ("data",) single-pod.
+  tp   — tensor parallel (attention heads / d_ff / vocab). Maps to "model".
+  dp   — batch data parallel for activations: ("pod", "data").
+
+Rules are name-based (regex on the pytree path) with a leading-stack-dim
+fixup: scanned layer stacks have an extra L axis which is never sharded.
+A dimension is only sharded when divisible by the axis size — otherwise
+dropped to None (GQA head counts vs tp=16 — GSPMD then chooses; see
+DESIGN.md §4/§6).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, logical spec per trailing dim)
+_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # vocab over tp, d_model over fsdp; lookup is a one-hot matmul under a
+    # mesh (layers.embed) so the sharded table partitions cleanly
+    (r"embed/tok$",                    ("tp", "fsdp")),
+    (r"embed/head$",                   ("fsdp", "tp")),
+    (r"attn/wq$|attn/wk$|attn/wv$",    ("fsdp", "tp")),
+    (r"attn/wo$",                      ("tp", "fsdp")),
+    (r"attn/b[qkv]$",                  ("tp",)),
+    (r"xattn/wq$|xattn/wk$|xattn/wv$", ("fsdp", "tp")),
+    (r"xattn/wo$",                     ("tp", "fsdp")),
+    (r"xattn/b[qkv]$",                 ("tp",)),
+    (r"mlp/w_gate$|mlp/w_up$",         ("fsdp", "tp")),
+    (r"mlp/w_down$",                   ("tp", "fsdp")),
+    (r"moe/router$",                   ("fsdp", None)),
+    (r"moe/w_gate$|moe/w_up$",         ("tp", "fsdp", None)),   # experts on tp (EP)
+    (r"moe/w_down$",                   ("tp", None, "fsdp")),
+    (r"shared/w_gate$|shared/w_up$",   ("fsdp", "tp")),
+    (r"shared/w_down$",                ("tp", "fsdp")),
+    (r"mix/w[rkvg]$|mix/cr$",          ("fsdp", "tp")),
+    (r"mix/wo$|mix/cv$",               ("tp", "fsdp")),
+    (r"mix/ck$",                       ("fsdp", "tp")),
+    (r"mix/wA$",                       ("fsdp", None)),
+    (r"mix/wB$",                       (None, "tp")),
+    (r"ssm/wx$|ssm/wB$|ssm/wC$",       ("fsdp", "tp")),
+    (r"ssm/wdt$",                      ("fsdp", None)),
+    (r"ssm/wo$",                       ("tp", "fsdp")),
+    (r"ssm/conv$",                     (None, "tp")),
+    (r"meta$",                         (None, None)),
+]
+
+
+def mesh_axes(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    names = mesh.axis_names
+    fsdp = tuple(n for n in ("pod", "data") if n in names)
+    tp = ("model",) if "model" in names else ()
+    return {
+        "fsdp": fsdp,
+        "dp": fsdp,
+        "tp": tp,
+        "all": fsdp + tp,
+    }
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical axis names — no-op outside a
+    mesh context (smoke tests), drops non-divisible dims (GQA vs tp)."""
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or mesh.size == 1:
+        return x
+    la = mesh_axes(mesh)
+    spec: List[Any] = []
+    for dim, name in zip(x.shape, logical):
+        axes = la.get(name) if name else None
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def logical_to_spec(mesh: Mesh, logical: Tuple[Optional[str], ...],
+                    shape: Tuple[int, ...]) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-divisible dims."""
+    la = mesh_axes(mesh)
+    extra = len(shape) - len(logical)
+    out: List[Any] = [None] * extra
+    for dim, name in zip(shape[extra:], logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = la[name]
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_shardings(mesh: Mesh, params_shape) -> Any:
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree."""
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, logical in _RULES:
+            if re.search(pat, ps):
+                return NamedSharding(mesh, logical_to_spec(mesh, logical, leaf.shape))
+        return NamedSharding(mesh, P())  # norms, scalars: replicated
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> Any:
+    """Token batches: shard the global batch dim over dp (if divisible)."""
+    la = mesh_axes(mesh)
+    dp = la["dp"]
+
+    def assign(path, leaf):
+        b = leaf.shape[0]
+        if dp and b % _axis_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+_CACHE_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # trailing-dim logical specs; stacked (L, ...) leading dims padded None.
+    # KV span shards over tp: sequence-sharded KV is what lets a 32k×128 or
+    # 500k×1 cache fit per device (DESIGN.md §4); batch over dp.
+    (r"/k$|/v$",           ("dp", "tp", None, None)),    # (B, span, Kh, dh)
+    (r"/kpos$",            ("dp", "tp")),                # (B, span)
+    (r"/S$",               ("dp", "tp", None, None)),    # rwkv (B, H, hs, hs)
+    (r"x_last_tm$|x_last_cm$", ("dp", "tp")),            # (B, D)
+    (r"ssm/h$",            ("dp", "tp", None, None)),    # (B, H, N, P)
+    (r"ssm/conv$",         ("dp", None, "tp")),          # (B, 4, d_inner)
+    (r"enc_out$",          ("dp", "tp", None)),          # (B, S_src, D)
+    (r"enc_pos$",          ("dp", "tp")),
+    (r"pos$",              ("dp",)),
+]
+
+
+def cache_shardings(mesh: Mesh, cache_shape) -> Any:
+    """Decode/prefill caches; handles both stacked (L, …) pytrees (scan
+    kinds) and per-layer lists (hybrid)."""
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, logical in _CACHE_RULES:
+            if re.search(pat, ps):
+                return NamedSharding(
+                    mesh, logical_to_spec(mesh, logical, leaf.shape)
+                )
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

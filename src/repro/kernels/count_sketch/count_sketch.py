@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: signed scatter-add into k buckets (count sketch).
+
+Used by the sketch-semiring leaves and by gradient compression
+(optim/grad_compress).  TPU adaptation: random scatter is slow on TPU
+(serializes through scalar memory), so the kernel reformulates each
+input tile's contribution as a **one-hot × value matmul** on the MXU:
+
+    sketch_tile[k] = Σ_t onehot(buckets[t])[k] · signs[t] · x[t]
+                   = (onehot_matrix ᵀ · (signs ⊙ x))
+
+The grid walks input tiles; bucket-tile partial sketches accumulate in
+the output block (revisited across grid steps — Pallas guarantees
+sequential grid order on TPU, so the read-modify-write is safe).
+VMEM: x/bucket/sign tiles (nt each) + one-hot (nt × k) f32 ≤ ~2 MB at
+nt=512, k=1024.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, s_ref, o_ref, *, k: int):
+    t = pl.program_id(0)
+    x = x_ref[...]                                   # (nt,)
+    b = b_ref[...]
+    s = s_ref[...]
+    oh = (b[:, None] == jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1))
+    contrib = jnp.dot(
+        (x * s)[None, :], oh.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )[0]
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def count_sketch(x: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray,
+                 k: int, tile: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """x/buckets/signs: (n,) → (k,).  n padded to the tile; padded lanes
+    carry sign 0 so they contribute nothing."""
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        buckets = jnp.pad(buckets, (0, pad))
+        signs = jnp.pad(signs, (0, pad))
+    grid = (x.shape[0] // tile,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), buckets, signs.astype(jnp.float32))

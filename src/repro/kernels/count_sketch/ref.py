@@ -1,0 +1,9 @@
+"""Oracle: signed scatter-add count sketch (pure jnp)."""
+import jax
+import jax.numpy as jnp
+
+
+def count_sketch_ref(x: jnp.ndarray, buckets: jnp.ndarray, signs: jnp.ndarray,
+                     k: int) -> jnp.ndarray:
+    """x, buckets, signs: (n,) → (k,) sketch  S·x."""
+    return jax.ops.segment_sum(x * signs, buckets, num_segments=k)

@@ -1,0 +1,15 @@
+"""Oracle: dense softmax attention per (batch·head), causal optional."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q/k/v: (BH, S, dh) → (BH, S, dh)."""
+    BH, S, dh = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), -1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

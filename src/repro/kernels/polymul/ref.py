@@ -1,0 +1,11 @@
+"""Oracle for the sketch-semiring ⊗: batched circular convolution mod z^k
+(pure jnp, FFT form — exactly PolyCoeff.mul)."""
+import jax.numpy as jnp
+
+
+def poly_mul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: (..., k) real coefficient vectors → (..., k) circular product."""
+    k = a.shape[-1]
+    fa = jnp.fft.rfft(a, n=k, axis=-1)
+    fb = jnp.fft.rfft(b, n=k, axis=-1)
+    return jnp.fft.irfft(fa * fb, n=k, axis=-1).astype(a.dtype)

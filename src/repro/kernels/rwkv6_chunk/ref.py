@@ -1,0 +1,3 @@
+"""Oracle: the chunked RWKV-6 WKV from models/rwkv6 (itself validated
+against the step-by-step recurrence in tests/test_archs.py)."""
+from repro.models.rwkv6 import rwkv_chunked as rwkv6_chunk_ref  # noqa: F401

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every jax import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY in this process; smoke tests
+# and benchmarks see the single real CPU device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.distributed.sharding import (       # noqa: E402
+    batch_shardings, cache_shardings, logical_to_spec, mesh_axes,
+    param_shardings, replicated,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import input_specs, make_train_step, n_micro  # noqa: E402
+from repro.models import Model                 # noqa: E402
+from repro.optim import adamw                  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against ShapeDtypeStruct stand-ins.  Proves the distribution
+config is coherent — sharding mismatches, compile-time OOM, and
+unsupported collectives all fail HERE, without hardware.  Artifacts
+(memory analysis, cost analysis, collective census) feed EXPERIMENTS.md
+§Dry-run and benchmarks/roofline.py.
+"""
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_census(hlo: str):
+    """Count collective ops + total result bytes from compiled HLO text."""
+    census = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(\w+)\[([\d,]*)\]\S*\s+(all-gather|all-reduce|reduce-scatter"
+        r"|all-to-all|collective-permute)\(",
+    )
+    dsize = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+             "f64": 8, "s8": 1, "u8": 1, "c64": 8, "s64": 8, "u64": 8}
+    for m in pat.finditer(hlo):
+        dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        census[op]["count"] += 1
+        census[op]["bytes"] += n * dsize.get(dt, 4)
+    return census
+
+
+def opt_shardings(mesh, pshard, opt_shape):
+    rep = NamedSharding(mesh, P())
+    return adamw.OptState(
+        step=rep,
+        m=pshard,
+        v=pshard,
+        master=jax.tree.map(lambda _: rep, opt_shape.master),
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, save_hlo=None):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    model = Model(cfg)
+    mode, specs = input_specs(arch, shape_name)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = param_shardings(mesh, params_shape)
+    rep = NamedSharding(mesh, P())
+
+    with mesh:
+        if mode == "train":
+            ocfg = adamw.AdamWConfig()
+            opt_shape = jax.eval_shape(partial(adamw.init, ocfg), params_shape)
+            oshard = opt_shardings(mesh, pshard, opt_shape)
+            bshard = batch_shardings(mesh, specs["batch"])
+            dp = 1
+            for a in mesh_axes(mesh)["dp"]:
+                dp *= mesh.shape[a]
+            G = configs.SHAPES[shape_name].global_batch
+            step = make_train_step(model, ocfg, n_micro(arch, G, dp))
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard,
+                               jax.tree.map(lambda _: rep,
+                                            {"loss": 0, "grad_norm": 0, "lr": 0})),
+                donate_argnums=(0, 1),
+            ).lower(params_shape, opt_shape, specs["batch"])
+        elif mode == "prefill":
+            bshard = batch_shardings(mesh, specs["batch"])
+            cache_shape = jax.eval_shape(
+                lambda p, b: model.prefill(p, b)[1], params_shape, specs["batch"]
+            )
+            cshard = cache_shardings(mesh, cache_shape)
+            B = configs.SHAPES[shape_name].global_batch
+            logit_shard = NamedSharding(
+                mesh, logical_to_spec(mesh, ("dp", "tp"), (B, cfg.padded_vocab))
+            )
+            lowered = jax.jit(
+                model.prefill,
+                in_shardings=(pshard, bshard),
+                out_shardings=(logit_shard, cshard),
+            ).lower(params_shape, specs["batch"])
+        else:  # decode
+            cshard = cache_shardings(mesh, specs["cache"])
+            B = specs["tokens"].shape[0]
+            tok_shard = NamedSharding(mesh, logical_to_spec(mesh, ("dp",), (B,)))
+            logit_shard = NamedSharding(
+                mesh, logical_to_spec(mesh, ("dp", "tp"), (B, cfg.padded_vocab))
+            )
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(pshard, cshard, tok_shard),
+                out_shardings=(logit_shard, cshard),
+                donate_argnums=(1,),
+            ).lower(params_shape, specs["cache"], specs["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device_bytes": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "total_live": mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                          + mem.output_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops_per_device_loopbody_once": cost.get("flops", -1.0),
+            "bytes_accessed": cost.get("bytes accessed", -1.0),
+            "transcendentals": cost.get("transcendentals", -1.0),
+        },
+        "collectives_hlo": census,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        cells = configs.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                continue
+            try:
+                rec = run_cell(
+                    arch, shape, mp,
+                    save_hlo=os.path.join(args.out, tag + ".hlo")
+                    if args.save_hlo else None,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                gb = rec["per_device_bytes"]["total_live"] / 2**30
+                print(f"[ok]   {tag}: {gb:.2f} GiB/device, "
+                      f"compile {rec['compile_s']}s")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+    print("dry-run complete;", ("%d FAILURES" % n_fail) if n_fail else "all passed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Step builders + input specs for every (arch × shape) cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation) — the dry-run
+lowers against these.  ``make_train_step`` builds the production step:
+microbatched gradient accumulation (lax.scan), fp32 accumulation, global
+grad-norm clip, sharded AdamW, optional count-sketch gradient
+compression on the cross-pod axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import Model
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+# per-arch microbatch count for train_4k (global batch 256); chosen so
+# per-device activations stay within v5e HBM at the production mesh.
+# Clamp with n_micro(arch, dp): the microbatch must stay shardable over dp.
+N_MICRO = {
+    "qwen2_5_32b": 16,
+    "tinyllama_1_1b": 8,
+    "llama3_405b": 16,
+    "granite_3_8b": 16,
+    "dbrx_132b": 16,
+    "llama4_scout_17b_a16e": 16,
+    "seamless_m4t_medium": 8,
+    "llava_next_34b": 16,
+    "rwkv6_1_6b": 8,
+    "hymba_1_5b": 8,
+}
+
+
+def n_micro(arch: str, global_batch: int, dp_size: int) -> int:
+    """Accumulation steps such that microbatch size ≥ dp (stays sharded)."""
+    return max(1, min(N_MICRO.get(arch, 8), global_batch // max(dp_size, 1)))
+
+
+def _tokens_spec(B, S):
+    return jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: configs.ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one global batch of this arch × shape."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.is_encdec:
+        return {
+            "src_frames": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), dt),
+            "tokens": _tokens_spec(B, S // 2),
+        }
+    if cfg.frontend == "patches":
+        return {
+            "patches": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), dt),
+            "tokens": _tokens_spec(B, S - S // 2),
+        }
+    return {"tokens": _tokens_spec(B, S)}
+
+
+def input_specs(arch: str, shape_name: str):
+    """(mode, specs dict) for the dry-run: train batch, prefill batch, or
+    (cache, tokens) for decode."""
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    model = Model(cfg)
+    if shape.mode == "train":
+        return "train", {"batch": batch_specs(cfg, shape)}
+    if shape.mode == "prefill":
+        return "prefill", {"batch": batch_specs(cfg, shape)}
+    # decode: KV cache of seq_len, one new token
+    B, S = shape.global_batch, shape.seq_len
+    src = S // 2 if cfg.is_encdec else 0
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, src_len=src))
+    return "decode", {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def split_micro(batch, n_micro: int):
+    """(G, ...) → (n_micro, G/n_micro, ...) for scan-based accumulation."""
+    return jax.tree.map(
+        lambda a: a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:]), batch
+    )
+
+
+def make_train_step(model: Model, ocfg: adamw.AdamWConfig, n_micro: int,
+                    compressor=None):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    compressor: optional GradCompressor (count-sketch, optim/grad_compress)
+    applied to the accumulated gradient before the optimizer — the paper's
+    sketch machinery as a distributed-optimization trick.
+    """
+
+    def train_step(params, opt_state, batch):
+        micro = split_micro(batch, n_micro)
+
+        def body(acc, mb):
+            g_acc, l_acc = acc
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, mb
+            )
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+            )
+            return (g_acc, l_acc + metrics["ce"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if compressor is not None:
+            grads = compressor(grads)
+        params, opt_state, stats = adamw.apply(ocfg, params, grads, opt_state)
+        metrics = {"loss": loss_sum / n_micro, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_loss(model: Model):
+    def eval_loss(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics["ce"]
+
+    return eval_loss

@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .lm import Model
+
+__all__ = ["ModelConfig", "Model"]

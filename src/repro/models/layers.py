@@ -1,0 +1,425 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (blockwise
+online-softmax — the jnp form of the flash kernel in kernels/), MLPs,
+embeddings.  All matmul weights are plain jnp arrays in dict pytrees;
+sharding is annotated externally (distributed/sharding.py) so the same
+model code runs single-host smoke tests and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Init = jax.nn.initializers
+
+
+def _dense_init(key, shape, dtype, scale=1.0):
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms --
+
+def rmsnorm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ------------------------------------------------------------------ rope --
+
+def rope(x, positions, theta):
+    """x: (..., S, N, dh) rotary over last dim; positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention --
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D, N, Kh, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(k1, (D, N * dh), dtype),
+        "wk": _dense_init(k2, (D, Kh * dh), dtype),
+        "wv": _dense_init(k3, (D, Kh * dh), dtype),
+        "wo": _dense_init(k4, (N * dh, D), dtype, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((N * dh,), dtype)
+        p["bk"] = jnp.zeros((Kh * dh,), dtype)
+        p["bv"] = jnp.zeros((Kh * dh,), dtype)
+    return p
+
+
+GLOBAL_WINDOW = 1 << 30   # sentinel window = "full attention" (traced-safe)
+
+
+def _attn_mask(qp, kp, causal, window):
+    """(B, Sq, Sk) validity mask from absolute positions (pad = -1/INT_MAX).
+    window is an int32 (possibly traced, e.g. scanned per-layer); a value
+    ≥ GLOBAL_WINDOW means unrestricted."""
+    mask = (qp[:, :, None] >= 0) & (kp[:, None, :] >= 0) & (
+        kp[:, None, :] < jnp.iinfo(jnp.int32).max
+    )
+    if causal:
+        mask &= qp[:, :, None] >= kp[:, None, :]
+    mask &= qp[:, :, None] - kp[:, None, :] < window
+    return mask
+
+
+def _block_attn(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk):
+    """Blockwise online-softmax attention with a flash-style custom VJP.
+
+    Plain autodiff through the fwd scans would save every (q_block ×
+    kv_block) score tensor — the exact memory blowup FlashAttention's
+    backward avoids; the custom bwd recomputes scores per kv block and
+    accumulates dq/dk/dv instead (memory O(S·chunk), jnp reference of
+    kernels/flash_attention).  Shapes:
+      q: (B, Sq, N, dh), k/v: (B, Sk, Kh, dh), GQA via head grouping.
+    """
+    static_window = window if isinstance(window, int) and window < (1 << 29) \
+        and causal else None
+    w = jnp.asarray(GLOBAL_WINDOW if window is None else window, jnp.int32)
+    return _block_attn_core(q, k, v, q_pos, kv_pos, w, causal,
+                            q_chunk, kv_chunk, static_window)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _block_attn_core(q, k, v, q_pos, kv_pos, window, causal, q_chunk, kv_chunk,
+                     static_window=None):
+    out, _ = _block_attn_fwd(q, k, v, q_pos, kv_pos, causal, window,
+                             q_chunk, kv_chunk, static_window)
+    return out
+
+
+def _block_attn_vjp_fwd(q, k, v, q_pos, kv_pos, window, causal, q_chunk,
+                        kv_chunk, static_window=None):
+    out, lse = _block_attn_fwd(q, k, v, q_pos, kv_pos, causal, window,
+                               q_chunk, kv_chunk, static_window)
+    return out, (q, k, v, q_pos, kv_pos, window, out, lse)
+
+
+def _block_attn_vjp_bwd(causal, q_chunk, kv_chunk, static_window, res, dout):
+    """Flash backward: scan kv blocks, recompute p = exp(s − lse).
+    With a static window only the q-span [j·kc, j·kc + kc + w) can have
+    nonzero ds for kv block j — sliced dynamically (clamped slices stay
+    correct: masks are position-based)."""
+    q, k, v, q_pos, kv_pos, window, out, lse = res
+    B, Sq, N, dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = N // Kh
+    scale = 1.0 / np.sqrt(dh)
+    qg = (q * scale).reshape(B, Sq, Kh, G, dh).astype(jnp.float32)
+    dog = dout.reshape(B, Sq, Kh, G, dh).astype(jnp.float32)
+    outg = out.reshape(B, Sq, Kh, G, dh).astype(jnp.float32)
+    D = jnp.sum(dog * outg, axis=-1)                       # (B,Sq,Kh,G)
+
+    nk = max(1, -(-Sk // kv_chunk))
+    kc = -(-Sk // nk)
+    pad_k = nk * kc - Sk
+    kp = kv_pos
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kp = jnp.pad(kp, ((0, 0), (0, pad_k)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+    kb = kf.reshape(B, nk, kc, Kh, dh).swapaxes(0, 1)
+    vb = vf.reshape(B, nk, kc, Kh, dh).swapaxes(0, 1)
+    kpb = kp.reshape(B, nk, kc).swapaxes(0, 1)
+
+    Dt = D.transpose(0, 2, 3, 1)                            # (B,Kh,G,Sq)
+
+    if static_window is None:
+        def body(dq_acc, inp):
+            ki, vi, kpi = inp                               # (B,kc,Kh,dh)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ki)
+            mask = _attn_mask(q_pos, kpi, causal, window)
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            p = jnp.exp(s - lse[..., None])                 # (B,Kh,G,Sq,kc)
+            dv = jnp.einsum("bhgqk,bqhgd->bkhd", p, dog)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, vi)
+            ds = p * (dp - Dt[..., None])
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, ki)
+            dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg)    # qg pre-scaled
+            return dq_acc, (dk, dv)
+
+        dq0 = jnp.zeros((B, Sq, Kh, G, dh), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, kpb))
+    else:
+        SPAN = min(Sq, (-(-(kc + static_window) // 128) + 1) * 128)
+
+        def body(dq_acc, inp):
+            j, ki, vi, kpi = inp
+            start = jnp.maximum(j * kc, 0)                  # clamped by ds
+            qg_s = jax.lax.dynamic_slice_in_dim(qg, start, SPAN, 1)
+            dog_s = jax.lax.dynamic_slice_in_dim(dog, start, SPAN, 1)
+            qp_s = jax.lax.dynamic_slice_in_dim(q_pos, start, SPAN, 1)
+            lse_s = jax.lax.dynamic_slice_in_dim(lse, start, SPAN, 3)
+            Dt_s = jax.lax.dynamic_slice_in_dim(Dt, start, SPAN, 3)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg_s, ki)
+            mask = _attn_mask(qp_s, kpi, causal, window)
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            p = jnp.exp(s - lse_s[..., None])
+            dv = jnp.einsum("bhgqk,bqhgd->bkhd", p, dog_s)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog_s, vi)
+            ds = p * (dp - Dt_s[..., None])
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds, ki)
+            cur = jax.lax.dynamic_slice_in_dim(dq_acc, start, SPAN, 1)
+            dq_acc = jax.lax.dynamic_update_slice_in_dim(
+                dq_acc, cur + dq_c, start, 1)
+            dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg_s)
+            return dq_acc, (dk, dv)
+
+        dq0 = jnp.zeros((B, Sq, Kh, G, dh), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(
+            body, dq0, (jnp.arange(nk), kb, vb, kpb))
+    dq = (dq * scale).reshape(B, Sq, N, dh).astype(q.dtype)
+    dk = dks.swapaxes(0, 1).reshape(B, nk * kc, Kh, dh)[:, :Sk].astype(k.dtype)
+    dv = dvs.swapaxes(0, 1).reshape(B, nk * kc, Kh, dh)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv, None, None, None
+
+
+_block_attn_core.defvjp(_block_attn_vjp_fwd, _block_attn_vjp_bwd)
+
+
+def _block_attn_fwd(q, k, v, q_pos, kv_pos, causal, window, q_chunk, kv_chunk,
+                    static_window=None):
+    """Forward online-softmax pass; returns (out, lse).  With a static
+    window each q block gathers only the ≤ ⌈(qc+w)/kc⌉+1 kv blocks that
+    intersect its band (out-of-range gathers land on INT_MAX positions
+    → masked)."""
+    B, Sq, N, dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = N // Kh
+    scale = 1.0 / np.sqrt(dh)
+    q = (q * scale).reshape(B, Sq, Kh, G, dh)
+
+    nq = max(1, -(-Sq // q_chunk))
+    q_chunk = -(-Sq // nq)
+    nk = max(1, -(-Sk // kv_chunk))
+    kv_chunk = -(-Sk // nk)
+    pad_q = nq * q_chunk - Sq
+    pad_k = nk * kv_chunk - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=jnp.iinfo(jnp.int32).max)
+
+    qb = q.reshape(B, nq, q_chunk, Kh, G, dh)
+    kb = k.reshape(B, nk, kv_chunk, Kh, dh)
+    vb = v.reshape(B, nk, kv_chunk, Kh, dh)
+    qpb = q_pos.reshape(B, nq, q_chunk)
+    kpb = kv_pos.reshape(B, nk, kv_chunk)
+
+    nb_local = nk if static_window is None else min(
+        nk, -(-(q_chunk + static_window) // kv_chunk) + 1)
+
+    def per_qblock(bi, qi, qp):
+        # bi: q-block index; qi: (B, qc, Kh, G, dh); qp: (B, qc)
+        def body(carry, inp):
+            acc, m, l = carry
+            ki, vi, kp = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, ki).astype(jnp.float32)
+            mask = _attn_mask(qp, kp, causal, window)
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vi.dtype), vi
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        if static_window is None:
+            kbs, vbs, kps = kb, vb, kpb
+        else:  # gather only the banded kv blocks for this q block
+            last = jnp.minimum(((bi + 1) * q_chunk - 1) // kv_chunk, nk - 1)
+            kidx = last - nb_local + 1 + jnp.arange(nb_local)
+            kbs = jnp.take(kb, jnp.clip(kidx, 0, nk - 1), axis=1)
+            vbs = jnp.take(vb, jnp.clip(kidx, 0, nk - 1), axis=1)
+            kps = jnp.where(
+                ((kidx >= 0) & (kidx < nk))[None, :, None],
+                jnp.take(kpb, jnp.clip(kidx, 0, nk - 1), axis=1),
+                jnp.iinfo(jnp.int32).max,
+            )
+        qc = qi.shape[1]
+        acc0 = jnp.zeros((B, Kh, G, qc, dh), jnp.float32)
+        m0 = jnp.full((B, Kh, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (kbs.swapaxes(0, 1), vbs.swapaxes(0, 1), kps.swapaxes(0, 1)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))            # (B,Kh,G,qc)
+        return out.transpose(0, 3, 1, 2, 4), lse            # (B,qc,Kh,G,dh)
+
+    out, lse = jax.lax.map(
+        lambda args: per_qblock(*args),
+        (jnp.arange(nq), qb.swapaxes(0, 1), qpb.swapaxes(0, 1)),
+    )  # (nq, B, qc, Kh, G, dh), (nq, B, Kh, G, qc)
+    out = out.swapaxes(0, 1).reshape(B, nq * q_chunk, Kh * G * dh)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, Kh, G, nq * q_chunk)
+    return out[:, :Sq], lse[..., :Sq]
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, layer_window=None,
+              causal=True, kv=None, kv_positions=None):
+    """Self- (or cross-, when kv is given) attention.
+
+    x: (B, S, D); kv: optional (B, Sk, D) encoder output for cross-attn.
+    """
+    B, S, D = x.shape
+    N, Kh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    src = x if kv is None else kv
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, N, dh)
+    k = k.reshape(B, src.shape[1], Kh, dh)
+    v = v.reshape(B, src.shape[1], Kh, dh)
+    kv_pos = kv_positions if kv_positions is not None else positions
+    if kv is None:  # rope only for self-attention
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    out = _block_attn(
+        q, k, v, positions, kv_pos, causal and kv is None, layer_window,
+        cfg.q_chunk, cfg.kv_chunk,
+    )
+    return out.astype(x.dtype) @ p["wo"]
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, kpos, pos, *,
+                     layer_window=None):
+    """Single-token decode against a (B, S_max, Kh, dh) KV cache.
+
+    kpos: (B, S_max) the *absolute position* stored in each cache slot
+    (-1 = empty) — ring buffers and sliding windows mask exactly like the
+    training path.  pos: (B,) current position.
+    Returns (out, new_k_entry, new_v_entry) — cache update done by caller.
+    """
+    B, S, D = x.shape
+    assert S == 1
+    N, Kh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q.reshape(B, 1, N, dh), pos[:, None], cfg.rope_theta)
+    k = rope(k.reshape(B, 1, Kh, dh), pos[:, None], cfg.rope_theta)
+    v = v.reshape(B, 1, Kh, dh)
+
+    valid = (kpos >= 0) & (kpos < pos[:, None])
+    if layer_window is not None:
+        valid &= (pos[:, None] - kpos) < layer_window
+    G = N // Kh
+    qg = q.reshape(B, Kh, G, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, cache_k).astype(jnp.float32)
+    s = s / np.sqrt(dh)
+    # current token attends to itself too
+    s_self = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32) / np.sqrt(dh)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    m = jnp.maximum(s.max(-1), s_self[..., 0])
+    p_cache = jnp.exp(s - m[..., None])
+    p_self = jnp.exp(s_self[..., 0] - m)
+    denom = p_cache.sum(-1) + p_self
+    out = jnp.einsum("bhgs,bshd->bhgd", p_cache.astype(cache_v.dtype), cache_v).astype(jnp.float32)
+    out = out + p_self[..., None] * v[:, 0, :, None].astype(jnp.float32)
+    out = (out / denom[..., None]).reshape(B, 1, N * dh)
+    return out.astype(x.dtype) @ p["wo"], k, v
+
+
+# ------------------------------------------------------------------- mlp --
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": _dense_init(k1, (cfg.d_model, d_ff), dtype),
+        "w_down": _dense_init(k2, (d_ff, cfg.d_model), dtype,
+                              scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = _dense_init(k3, (cfg.d_model, d_ff), dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------ embeddings --
+
+def init_embed(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    V = cfg.padded_vocab
+    p = {"tok": (jax.random.normal(k1, (V, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(k2, (cfg.d_model, V), dtype)
+    return p
+
+
+def embed(p, tokens):
+    """Token embedding.
+
+    Under a sharded mesh the lookup is a one-hot matmul: XLA's SPMD
+    partitioner handles a (tokens, V) × (V, D) dot over a sharded table
+    cleanly (and on the MXU it's fast), whereas a vocab- or D-sharded
+    gather either trips verifier bugs or triggers involuntary full
+    rematerialization.  Single-device (smoke tests, CPU examples) keeps
+    the plain gather.
+    """
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or mesh.size == 1:
+        return jnp.take(p["tok"], tokens, axis=0)
+    tok = p["tok"]
+    oh = jax.nn.one_hot(tokens, tok.shape[0], dtype=tok.dtype)
+    return oh @ tok
+
+
+def unembed(p, cfg: ModelConfig, x):
+    """Logits over the *padded* vocab; callers mask ids ≥ cfg.vocab."""
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["head"]
+
+
+def mask_pad_logits(cfg: ModelConfig, logits):
+    ids = jnp.arange(logits.shape[-1])
+    return jnp.where(ids < cfg.vocab, logits, -1e30)

@@ -1,0 +1,172 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Recurrence per head (k-dim dk = v-dim dv = head_size):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Training uses a *chunked* parallel form (TPU adaptation — the GPU
+reference is a CUDA scan): within a chunk of length c, the pairwise
+decay exponents cum_{i-1} − cum_j (j < i) are all ≤ 0, so every
+exponential lies in (0, 1] — unconditionally stable without the
+normalization tricks GPU kernels need.  Cross-chunk state is carried by
+``lax.scan``.  Decode is the O(1) recurrent step.
+
+The same math is the oracle for kernels/rwkv6_chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _dense_init, rmsnorm
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        # token-shift data-dependent lerp (5 targets: w, k, v, r, g)
+        "mu": (jax.random.uniform(ks[0], (5, D)) * 0.5 + 0.25).astype(dtype),
+        # decay: w_t = exp(-exp(w0 + tanh(x @ A) @ B))
+        "w0": (jnp.zeros((D,)) - 4.0).astype(jnp.float32),
+        "wA": _dense_init(ks[1], (D, lora), dtype),
+        "wB": (jax.random.normal(ks[2], (lora, D)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[3], (H, hs)) * 0.1).astype(jnp.float32),
+        "wr": _dense_init(ks[4], (D, D), dtype),
+        "wk": _dense_init(ks[5], (D, D), dtype),
+        "wv": _dense_init(ks[6], (D, D), dtype),
+        "wg": _dense_init(ks[7], (D, D), dtype),
+        "wo": _dense_init(ks[8], (D, D), dtype, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        "ln_x": jnp.ones((D,), dtype),
+        # channel mix
+        "mu_c": (jax.random.uniform(ks[9], (2, D)) * 0.5 + 0.25).astype(dtype),
+        "ck": _dense_init(ks[10], (D, cfg.d_ff), dtype),
+        "cv": _dense_init(ks[11], (cfg.d_ff, D), dtype, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        "cr": _dense_init(jax.random.fold_in(key, 99), (D, D), dtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / supplied state at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _projections(p, cfg, x, x_prev):
+    """Shared by train/decode: r,k,v,g,logw from (B,S,D) inputs."""
+    dx = x_prev - x
+    mu = p["mu"].astype(x.dtype)                    # (5, D)
+    xw, xk, xv, xr, xg = [x + dx * mu[i] for i in range(5)]
+    logw = -jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)
+    )                                               # (B,S,D) ≤ 0
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    return r, k, v, g, logw
+
+
+def _heads(cfg, t):
+    B, S, D = t.shape
+    hs = cfg.rwkv_head_size
+    return t.reshape(B, S, D // hs, hs)
+
+
+def rwkv_chunked(r, k, v, logw, u, chunk):
+    """Chunked WKV: r,k,v (B,S,H,hs) f32; logw (B,S,H,hs) ≤ 0; u (H,hs).
+    Returns (B,S,H,hs) and leaves no state (training form, S % chunk == 0
+    after padding by caller)."""
+    B, S, H, hs = r.shape
+    nc = S // chunk
+    rc = r.reshape(B, nc, chunk, H, hs).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,hs)
+    kc = k.reshape(B, nc, chunk, H, hs).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, chunk, H, hs).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(B, nc, chunk, H, hs).transpose(1, 0, 3, 2, 4)
+
+    def body(S0, inp):
+        rr, kk, vv, ww = inp                         # (B,H,c,hs)
+        cum = jnp.cumsum(ww, axis=2)                 # inclusive, ≤ 0, decreasing
+        cum_excl = cum - ww                          # exclusive
+        # intra-chunk: A_ij = Σ_d r_id k_jd e^{cum_excl_i − cum_j}  (j < i)
+        E = jnp.exp(
+            jnp.clip(cum_excl[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+        )                                            # (B,H,c,c,hs)
+        A = jnp.einsum("bhid,bhjd,bhijd->bhij", rr, kk, E)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        A = jnp.where(mask, A, 0.0)
+        # u-bonus diagonal (current token)
+        diag = jnp.einsum("bhid,hd,bhid->bhi", rr, u, kk)
+        out = jnp.einsum("bhij,bhjd->bhid", A, vv) + diag[..., None] * vv
+        # inter-chunk: r_i ⊙ e^{cum_excl_i} applied to carried state
+        rW = rr * jnp.exp(cum_excl)
+        out = out + jnp.einsum("bhik,bhkd->bhid", rW, S0)
+        # state update: S' = diag(e^{cum_C}) S + Σ_j (k_j e^{cum_C − cum_j})ᵀ v_j
+        kW = kk * jnp.exp(cum[:, :, -1:, :] - cum)
+        S1 = jnp.exp(cum[:, :, -1, :])[..., None] * S0 + jnp.einsum(
+            "bhjk,bhjd->bhkd", kW, vv
+        )
+        return S1, out
+
+    S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    _, out = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    return out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hs)
+
+
+def time_mix(p, cfg: ModelConfig, x, use_kernel: bool = False):
+    """Training/prefill path.  x: (B,S,D)."""
+    B, S, D = x.shape
+    hs = cfg.rwkv_head_size
+    r, k, v, g, logw = _projections(p, cfg, x, _shift(x))
+    rh = _heads(cfg, r).astype(jnp.float32)
+    kh = _heads(cfg, k).astype(jnp.float32)
+    vh = _heads(cfg, v).astype(jnp.float32)
+    wh = _heads(cfg, logw)
+    chunk = cfg.ssm_chunk
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rh, kh, vh, wh = zf(rh), zf(kh), zf(vh), zf(wh)
+    if use_kernel:
+        from repro.kernels.rwkv6_chunk import ops as _kops
+
+        out = _kops.rwkv6_chunk(rh, kh, vh, wh, p["u"], chunk)
+    else:
+        out = rwkv_chunked(rh, kh, vh, wh, p["u"], chunk)
+    out = out[:, :S].reshape(B, S, D)
+    out = rmsnorm(out, p["ln_x"].astype(jnp.float32), 1e-5)
+    return (out.astype(x.dtype) * g) @ p["wo"]
+
+
+def time_mix_step(p, cfg: ModelConfig, x, state):
+    """Decode: x (B,1,D); state dict {S:(B,H,hs,hs), x_last:(B,D)}."""
+    B = x.shape[0]
+    r, k, v, g, logw = _projections(p, cfg, x, state["x_last"][:, None])
+    rh = _heads(cfg, r)[:, 0].astype(jnp.float32)     # (B,H,hs)
+    kh = _heads(cfg, k)[:, 0].astype(jnp.float32)
+    vh = _heads(cfg, v)[:, 0].astype(jnp.float32)
+    wh = jnp.exp(_heads(cfg, logw)[:, 0])             # (B,H,hs)
+    S0 = state["S"]
+    kv = jnp.einsum("bhk,bhd->bhkd", kh, vh)
+    out = jnp.einsum("bhk,bhkd->bhd", rh, S0 + p["u"][None, :, :, None] * kv)
+    S1 = wh[..., None] * S0 + kv
+    D = cfg.d_model
+    out = out.reshape(B, 1, D)
+    out = rmsnorm(out, p["ln_x"].astype(jnp.float32), 1e-5)
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    return out, {"S": S1, "x_last": x[:, 0]}
+
+
+def channel_mix(p, cfg: ModelConfig, x, x_last=None):
+    xp = _shift(x, x_last)
+    dx = xp - x
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + dx * mu[0]
+    xr = x + dx * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"])

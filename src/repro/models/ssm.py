@@ -1,0 +1,130 @@
+"""Mamba-2-style selective SSM branch (for Hymba's parallel heads).
+
+Per head (state size N, head dim P):
+    h_t = a_t · h_{t-1} + (dt_t x_t) B_tᵀ        h ∈ R^{N×P}
+    y_t = C_t h_t + D ⊙ x_t
+with scalar per-head decay a_t = exp(-dt_t · exp(A_log)) (dt via
+softplus).  Same chunked-scan structure as rwkv6.py, with scalar decay
+so the pairwise decay matrix is (c × c) per head — the SSD "attention
+form" (arXiv:2405.21060), all exponents ≤ 0 (stable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _dense_init
+
+
+def init_ssm(key, cfg: ModelConfig, dtype, d_inner: int):
+    N = cfg.ssm_state
+    H = cfg.ssm_heads or cfg.n_heads
+    P = d_inner // H
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _dense_init(ks[0], (cfg.d_model, d_inner), dtype),
+        "wB": _dense_init(ks[1], (cfg.d_model, H * N), dtype),
+        "wC": _dense_init(ks[2], (cfg.d_model, H * N), dtype),
+        "wdt": _dense_init(ks[3], (cfg.d_model, H), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "Dskip": jnp.ones((H, P), jnp.float32),
+        "wo": _dense_init(ks[4], (d_inner, cfg.d_model), dtype,
+                          scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        "conv": (jax.random.normal(ks[5], (4, d_inner)) * 0.1).astype(dtype),
+    }
+
+
+def _conv1d(x, w):
+    """Depthwise causal conv, kernel 4.  x: (B,S,D), w: (4,D)."""
+    pads = [jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]] for k in range(w.shape[0])]
+    return sum(pads[k] * w[w.shape[0] - 1 - k] for k in range(w.shape[0]))
+
+
+def _inputs(p, cfg, u):
+    B, S, _ = u.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    N = cfg.ssm_state
+    x = jax.nn.silu(_conv1d(u @ p["wx"], p["conv"]))
+    P = x.shape[-1] // H
+    x = x.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = (u @ p["wB"]).reshape(B, S, H, N).astype(jnp.float32)
+    Cm = (u @ p["wC"]).reshape(B, S, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    loga = -dt * jnp.exp(p["A_log"])                 # (B,S,H) ≤ 0
+    return x, Bm, Cm, dt, loga
+
+
+def ssm_chunked(x, Bm, Cm, dt, loga, Dskip, chunk):
+    """x:(B,S,H,P), Bm/Cm:(B,S,H,N), dt/loga:(B,S,H) → y:(B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    r = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xc, Bc, Cc, dc, lc = r(x), r(Bm), r(Cm), r(dt), r(loga)
+
+    def body(h0, inp):
+        xx, BB, CC, dd, ll = inp                      # (B,c,H,*)
+        cum = jnp.cumsum(ll, axis=1)                  # (B,c,H) ≤ 0
+        cum_excl = cum - ll
+        # SSD attention form: L_ij = e^{cum_i − cum_j} for j ≤ i (incl. diag)
+        L = jnp.exp(
+            jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0)
+        )                                             # (B,c,c,H)
+        A = jnp.einsum("bihn,bjhn->bijh", CC, BB) * L
+        mask = jnp.tril(jnp.ones((xx.shape[1], xx.shape[1]), bool))
+        A = jnp.where(mask[None, :, :, None], A, 0.0)
+        y = jnp.einsum("bijh,bjh,bjhp->bihp", A, dd, xx)
+        # inter-chunk
+        y = y + jnp.einsum("bihn,bih,bhnp->bihp", CC, jnp.exp(cum), h0)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,c,H)
+        h1 = jnp.exp(cum[:, -1, :])[:, :, None, None] * h0 + jnp.einsum(
+            "bjhn,bjh,bjh,bjhp->bhnp", BB, dd, decay_to_end, xx
+        )
+        return h1, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, y = jax.lax.scan(body, h0, (xc, Bc, Cc, dc, lc))
+    y = y.swapaxes(0, 1).reshape(B, S, H, P)
+    return y + x * Dskip
+
+
+def ssm_branch(p, cfg: ModelConfig, u, chunk=None):
+    """Training/prefill.  u: (B,S,D) → (B,S,D)."""
+    B, S, D = u.shape
+    chunk = chunk or cfg.ssm_chunk
+    x, Bm, Cm, dt, loga = _inputs(p, cfg, u)
+    pad = (-S) % chunk
+    if pad:
+        f4 = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, Bm, Cm, dt, loga = f4(x), f4(Bm), f4(Cm), f4(dt), f4(loga)
+    y = ssm_chunked(x, Bm, Cm, dt, loga, p["Dskip"], chunk)[:, :S]
+    B_, S_, H, P = y.shape
+    return y.reshape(B, S, H * P).astype(u.dtype) @ p["wo"]
+
+
+def ssm_step(p, cfg: ModelConfig, u, state):
+    """Decode.  u: (B,1,D); state {h:(B,H,N,P), conv:(B,4,d_inner)}."""
+    B = u.shape[0]
+    H = cfg.ssm_heads or cfg.n_heads
+    N = cfg.ssm_state
+    xin = (u @ p["wx"])[:, 0]                         # (B, d_inner)
+    conv_buf = jnp.concatenate([state["conv"][:, 1:], xin[:, None]], axis=1)
+    w = p["conv"]
+    # _conv1d: out_t = Σ_j w[j] · x_{t-(K-1)+j}; conv_buf[j] = x_{t-(K-1)+j}
+    x = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv_buf, w))
+    P = x.shape[-1] // H
+    x = x.reshape(B, H, P).astype(jnp.float32)
+    Bm = (u @ p["wB"])[:, 0].reshape(B, H, N).astype(jnp.float32)
+    Cm = (u @ p["wC"])[:, 0].reshape(B, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus((u @ p["wdt"])[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))            # (B,H)
+    h1 = a[..., None, None] * state["h"] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bm, dt, x
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, h1) + x * p["Dskip"]
+    out = y.reshape(B, 1, H * P).astype(u.dtype) @ p["wo"]
+    return out, {"h": h1, "conv": conv_buf}

@@ -1,0 +1,37 @@
+"""Elastic scaling: rebuild the mesh after device-set changes and
+reshard state from the last checkpoint.
+
+The checkpoint format is mesh-agnostic (global arrays restored through
+jax.make_array_from_callback against the *target* sharding), so
+downscaling 512→256 or reshaping (data, model) is a restore, not a
+conversion.  tests/test_checkpoint.py exercises a cross-device-count
+restore in a subprocess.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def plan_mesh(n_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid for the surviving device set.  Model
+    parallelism is fixed by the checkpointed layout preference; data
+    parallelism absorbs the loss."""
+    model = model_parallel
+    while model > 1 and n_devices % model:
+        model //= 2
+    return n_devices // model, model
+
+
+def rebuild_mesh(model_parallel: int):
+    n = len(jax.devices())
+    data, model = plan_mesh(n, model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def restore_elastic(ckpt, step, like, mesh, sharding_fn):
+    """Restore `like`-shaped state onto `mesh` (any size).
+
+    sharding_fn(mesh, like) → shardings pytree (e.g. param_shardings)."""
+    return ckpt.restore(step, like, sharding_fn(mesh, like))

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benchmarks must see the single real CPU device; only
+launch/dryrun.py forces 512 placeholder devices (in its own process).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import materialize_join
+from repro.relational.generators import star_schema, chain_schema
+
+
+@pytest.fixture(scope="session")
+def star():
+    sch = star_schema(seed=5, n_fact=300, n_dim=24)
+    J = materialize_join(sch)
+    X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
+    y = J[sch.label_column]
+    return sch, J, X, y
+
+
+@pytest.fixture(scope="session")
+def chain():
+    sch = chain_schema(seed=9, n_rows=128, n_tables=3, fanout=3)
+    J = materialize_join(sch)
+    X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
+    y = J[sch.label_column]
+    return sch, J, X, y

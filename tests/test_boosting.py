@@ -1,0 +1,127 @@
+"""Algorithms 1–3 end-to-end:
+- exact relational training ≡ materialized-join greedy training,
+- sketched training selects identical trees (paper's 'similar parameters',
+  strengthened — see trainer.py docstring),
+- sketched SSR within (1±ε) per grouping table (Thm 3.4),
+- query-count accounting matches Thm 2.4 (O(m²L²τ)) vs Thm 3.1 (O(mLτ)).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import BoostConfig, Booster, MaterializedBooster, predict_rows
+
+
+def _fit_all(sch, X, y, n_trees=3, depth=3, k=256):
+    cfg = BoostConfig(n_trees=n_trees, depth=depth, mode="exact")
+    be = Booster(sch, cfg)
+    te, tre = be.fit()
+    bm = MaterializedBooster(X, y, cfg)
+    tm = bm.fit()
+    cfgs = BoostConfig(n_trees=n_trees, depth=depth, mode="sketch", sketch_k=k)
+    bs = Booster(sch, cfgs)
+    ts, trs = bs.fit()
+    return (te, tre), (tm,), (ts, trs)
+
+
+@pytest.fixture(scope="module")
+def fitted_star(star):
+    sch, J, X, y = star
+    return star, _fit_all(sch, X, y)
+
+
+def test_exact_equals_materialized(fitted_star):
+    (sch, J, X, y), ((te, _), (tm,), _) = fitted_star
+    np.testing.assert_allclose(
+        np.asarray(predict_rows(te, X)), np.asarray(predict_rows(tm, X)), atol=2e-2
+    )
+
+
+def test_training_reduces_mse(fitted_star):
+    (sch, J, X, y), ((te, _), _, _) = fitted_star
+    mse = float(jnp.mean((y - predict_rows(te, X)) ** 2))
+    assert mse < 0.1 * float(jnp.var(y))
+
+
+def test_sketch_trees_identical(fitted_star):
+    (sch, J, X, y), ((te, _), _, (ts, _)) = fitted_star
+    for a, b in zip(te, ts):
+        np.testing.assert_array_equal(np.asarray(a.feat), np.asarray(b.feat))
+        np.testing.assert_allclose(np.asarray(a.leaf), np.asarray(b.leaf), atol=1e-4)
+
+
+def test_sketch_ssr_within_eps(fitted_star):
+    (sch, J, X, y), ((_, tre), _, (_, trs)) = fitted_star
+    errs = []
+    for e, s in zip(tre.node_ssr, trs.node_ssr):
+        for tbl in e:
+            if tbl == "fact":
+                continue  # singleton groups → sketch exact (fanout-1 join)
+            ee, ss = np.asarray(e[tbl]), np.asarray(s[tbl])
+            m = ee > 1.0
+            if m.any():
+                errs.append((np.abs(ss - ee) / ee)[m])
+    errs = np.concatenate(errs)
+    assert errs.mean() < 0.2, errs.mean()
+
+
+def test_fact_grouping_ssr_exact(fitted_star):
+    """Fanout-1 grouping gives singleton groups: the sketched SSR must be
+    *exactly* the true SSR (no collisions within a group of one)."""
+    (sch, J, X, y), ((_, tre), _, (_, trs)) = fitted_star
+    for e, s in zip(tre.node_ssr, trs.node_ssr):
+        np.testing.assert_allclose(
+            np.asarray(s["fact"]), np.asarray(e["fact"]), rtol=2e-3, atol=1e-2
+        )
+
+
+def test_query_complexity(star):
+    """Thm 2.4 vs Thm 3.1: queries per level = τ(1+M+M²) vs τ(2+2M)."""
+    sch, J, X, y = star
+    tau = len(sch.tables)
+    for mode, per_level in (
+        ("exact", lambda M: tau * (1 + M + M * M)),
+        ("sketch", lambda M: tau * (1 + M + 1 + M)),
+    ):
+        cfg = BoostConfig(n_trees=2, depth=2, mode=mode, sketch_k=64)
+        b = Booster(sch, cfg)
+        _, tr = b.fit()
+        L = 2 ** cfg.depth
+        want = cfg.depth * per_level(0) + cfg.depth * per_level(L)
+        assert tr.queries == want, (mode, tr.queries, want)
+
+
+def test_chain_exact_equals_materialized(chain):
+    sch, J, X, y = chain
+    cfg = BoostConfig(n_trees=2, depth=2, mode="exact")
+    te, _ = Booster(sch, cfg).fit()
+    tm = MaterializedBooster(X, y, cfg).fit()
+    np.testing.assert_allclose(
+        np.asarray(predict_rows(te, X)), np.asarray(predict_rows(tm, X)), atol=2e-2
+    )
+
+
+def test_ssr_mode_off_same_trees(star):
+    """Production fast path (no SSR reporting) must not change the model."""
+    sch, J, X, y = star
+    a, _ = Booster(sch, BoostConfig(n_trees=2, depth=2, mode="sketch", ssr_mode="off")).fit()
+    b, _ = Booster(sch, BoostConfig(n_trees=2, depth=2, mode="exact")).fit()
+    np.testing.assert_allclose(
+        np.asarray(predict_rows(a, X)), np.asarray(predict_rows(b, X)), atol=1e-4
+    )
+
+
+def test_predict_grouped(star):
+    """Relational scoring: per-fact-row Σŷ == brute force on J."""
+    sch, J, X, y = star
+    cfg = BoostConfig(n_trees=2, depth=2, mode="sketch", ssr_mode="off")
+    b = Booster(sch, cfg)
+    trees, _ = b.fit()
+    tot, cnt = b.predict_grouped(trees, "fact")
+    rows = np.asarray(J["__rows__fact"])
+    preds = np.asarray(predict_rows(trees, X))
+    want = np.bincount(rows, weights=preds, minlength=sch.table("fact").n_rows)
+    np.testing.assert_allclose(np.asarray(tot), want, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(cnt), np.bincount(rows, minlength=sch.table("fact").n_rows)
+    )

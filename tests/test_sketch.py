@@ -1,0 +1,111 @@
+"""Tensor-sketch properties: Thm 1.2 (AMM), linearity, Parseval,
+coefficient↔frequency domain equivalence, and the SumProd-embedded
+sketch vs the dense oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Hash2, PolyCoeff, PolyFreq, SumProd, TableHashes, count_sketch_dense,
+    sketch_factors, tensor_sketch_dense, materialize_join,
+)
+from repro.relational.generators import star_schema
+
+
+@pytest.mark.parametrize("k", [16, 64, 256])
+def test_coeff_freq_equivalence(k):
+    pc, pf = PolyCoeff(k), PolyFreq(k)
+    a = jax.random.normal(jax.random.PRNGKey(0), (7, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (7, k))
+    np.testing.assert_allclose(
+        np.asarray(pf.to_coeff(pf.mul(pc.to_freq(a), pc.to_freq(b)))),
+        np.asarray(pc.mul(a, b)),
+        atol=1e-4,
+    )
+    # Parseval
+    np.testing.assert_allclose(
+        np.asarray(pf.norm_sq(pc.to_freq(a))), np.asarray(pc.norm_sq(a)), rtol=1e-4
+    )
+
+
+def test_count_sketch_inner_product_unbiased():
+    """⟨Sa, Sb⟩ ≈ ⟨a, b⟩ across hash draws (AMM, Thm 1.2)."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    exact = float(a @ b)
+    ests = []
+    for t in range(64):
+        h = Hash2.make(jax.random.PRNGKey(t), 128)
+        ests.append(float(count_sketch_dense(a, h) @ count_sketch_dense(b, h)))
+    err = abs(np.mean(ests) - exact)
+    assert err < 0.2 * float(jnp.linalg.norm(a) * jnp.linalg.norm(b))
+
+
+def test_sumprod_sketch_equals_dense_oracle():
+    """Sketch computed *inside* the SumProd query == sketching the explicit
+    Kronecker-product vector (n_fact=1 so the join is a single Kronecker)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    k = 64
+    # two tiny tables joined on a single shared key value → J = cross product
+    from repro.core import Schema, Table
+
+    na, nb = 5, 7
+    ta = Table("A", {"k": np.zeros(na, np.int64), "fa": rng.standard_normal(na).astype(np.float32)})
+    tb = Table("B", {"k": np.zeros(nb, np.int64), "fb": rng.standard_normal(nb).astype(np.float32)})
+    sch = Schema([ta, tb], label=("A", "fa"))
+    sp = SumProd(sch)
+    hashes = TableHashes.make(jax.random.PRNGKey(1), sch, k)
+    sem = PolyFreq(k)
+    f = sketch_factors(sch, sem, hashes, "A", sch.labels)
+    got = np.asarray(sem.to_coeff(sp(sem, f)))
+
+    # dense oracle: vector u ⊙ v with u = labels (A side), v = ones (B side)
+    # hashed with w_ids as indices
+    wa, wb = np.asarray(sch.w_ids["A"]), np.asarray(sch.w_ids["B"])
+    da, db = sch.domain_sizes["A"], sch.domain_sizes["B"]
+    u = np.zeros(da, np.float32)
+    np.add.at(u, wa, np.asarray(sch.labels))
+    v = np.zeros(db, np.float32)
+    np.add.at(v, wb, 1.0)
+    want = np.asarray(
+        tensor_sketch_dense(
+            [jnp.asarray(u), jnp.asarray(v)],
+            [hashes.hashes["A"], hashes.hashes["B"]],
+            k,
+        )
+    )
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_norm_concentration(seed):
+    """‖Y′‖² concentrates around ‖Y‖² (k = 256 ⇒ ε ≈ 1/√k regime)."""
+    sch = star_schema(seed=seed % 17, n_fact=200, n_dim=16)
+    sp = SumProd(sch)
+    J = materialize_join(sch)
+    y = np.asarray(J[sch.label_column])
+    sem = PolyFreq(256)
+    hashes = TableHashes.make(jax.random.PRNGKey(seed), sch, 256)
+    f = sketch_factors(sch, sem, hashes, sch.label_table, sch.labels)
+    est = float(sem.norm_sq(sp(sem, f)))
+    exact = float((y ** 2).sum())
+    assert abs(est - exact) / exact < 0.6  # generous single-draw tail bound
+
+
+def test_sketch_linearity():
+    sch = star_schema(seed=2, n_fact=120, n_dim=12)
+    sp = SumProd(sch)
+    sem = PolyFreq(64)
+    hashes = TableHashes.make(jax.random.PRNGKey(5), sch, 64)
+    f = sketch_factors(sch, sem, hashes, sch.label_table, sch.labels)
+    total = sp(sem, f)
+    grouped = sp(sem, f, group_by="dim0")
+    np.testing.assert_allclose(
+        np.asarray(grouped.sum(0)), np.asarray(total), rtol=1e-3, atol=1e-3
+    )

@@ -1,0 +1,110 @@
+"""Inside-out SumProd vs brute force over the materialized join —
+including a hypothesis sweep over random acyclic schemas and multiple
+semirings (the engine must be semiring-generic: Lemma 1.1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Arithmetic, BooleanSR, Channels, NotAcyclicError, Schema, SumProd, Table,
+    Tropical, materialize_join,
+)
+
+
+def _check_all_semirings(sch):
+    sp = SumProd(sch)
+    J = materialize_join(sch)
+    y = np.asarray(J[sch.label_column])
+    nJ = len(y)
+
+    # counting
+    a = Arithmetic()
+    assert int(sp(a, sp.ones_factors(a))) == nJ
+
+    if nJ == 0:
+        return
+
+    # fused (1, y, y²) channels
+    c3 = Channels(3)
+    f = sp.ones_factors(c3)
+    lbl = sch.labels
+    f[sch.label_table] = jnp.stack([jnp.ones_like(lbl), lbl, lbl ** 2], -1)
+    out = np.asarray(sp(c3, f))
+    np.testing.assert_allclose(out, [nJ, y.sum(), (y ** 2).sum()], rtol=1e-4, atol=1e-4)
+
+    # grouped by every table == bincount brute force
+    for t in sch.tables:
+        g = np.asarray(sp(c3, f, group_by=t.name))
+        rows = np.asarray(J["__rows__" + t.name])
+        np.testing.assert_allclose(
+            g[:, 0], np.bincount(rows, minlength=t.n_rows), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            g[:, 1], np.bincount(rows, weights=y, minlength=t.n_rows),
+            rtol=1e-3, atol=1e-3,
+        )
+
+    # tropical: min over join rows of Σ per-table weights
+    tr = Tropical()
+    rng = np.random.default_rng(0)
+    ftr = {
+        t.name: jnp.asarray(rng.standard_normal(t.n_rows), jnp.float32)
+        for t in sch.tables
+    }
+    w = sum(
+        np.asarray(ftr[t.name])[np.asarray(J["__rows__" + t.name])]
+        for t in sch.tables
+    )
+    assert abs(float(sp(tr, ftr)) - w.min()) < 1e-4
+
+    # boolean: non-emptiness
+    b = BooleanSR()
+    assert bool(sp(b, sp.ones_factors(b))) == (nJ > 0)
+
+
+def test_star(star):
+    _check_all_semirings(star[0])
+
+
+def test_chain(chain):
+    _check_all_semirings(chain[0])
+
+
+def test_cyclic_raises():
+    # triangle R(a,b), S(b,c), T(c,a) is the canonical cyclic join
+    mk = lambda n, c1, c2: Table(
+        name=n,
+        columns={c1: np.arange(4, dtype=np.int64), c2: np.arange(4, dtype=np.int64)},
+    )
+    with pytest.raises(NotAcyclicError):
+        Schema([mk("R", "a", "b"), mk("S", "b", "c"), mk("T", "c", "a")], label=("R", "a"))
+
+
+@st.composite
+def random_acyclic_schema(draw):
+    """Random join *tree* over τ tables (trees are always acyclic)."""
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31 - 1)))
+    tau = draw(st.integers(2, 4))
+    tables = []
+    for i in range(tau):
+        n = draw(st.integers(2, 10))
+        cols = {}
+        if i > 0:
+            parent = int(rng.integers(0, i))
+            key = f"k{parent}_{i}"
+            dom = draw(st.integers(1, 4))
+            cols[key] = rng.integers(0, dom, n).astype(np.int64)
+            # parent must carry the key too
+            pt = tables[parent]
+            pt.columns[key] = rng.integers(0, dom, pt.n_rows).astype(np.int64)
+        cols[f"f{i}"] = rng.standard_normal(n).astype(np.float32)
+        tables.append(Table(name=f"t{i}", columns=cols))
+    tables = [Table(name=t.name, columns=t.columns) for t in tables]  # re-derive features
+    return Schema(tables, label=("t0", "f0"))
+
+
+@settings(max_examples=12, deadline=None)
+@given(random_acyclic_schema())
+def test_random_acyclic_schemas(sch):
+    _check_all_semirings(sch)
