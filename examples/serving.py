@@ -1,16 +1,30 @@
-"""Batched serving example: prefill + greedy decode on the reduced MoE
-config (dbrx family) — exercises the KV cache, MoE near-dropless
-inference dispatch, and the decode step the dry-run lowers at 32k/500k.
+"""Serving examples — relational scorer by default, LM stack via --lm.
+
+Relational path (the paper's workload): train boosted trees in-database,
+compile the ensemble into the one-pass scorer, and serve interactive
+row-score traffic through the micro-batching service:
 
     PYTHONPATH=src python examples/serving.py
+
+LM path (prefill + greedy decode on the reduced MoE config):
+
+    PYTHONPATH=src python examples/serving.py --lm
 """
-from repro.launch import serve
+import sys
+
+from repro.launch import serve, serve_relational
 
 
-def main():
-    serve.main([
-        "--arch", "dbrx_132b", "--batch", "4",
-        "--prompt-len", "64", "--decode-tokens", "32",
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--lm" in argv:
+        argv.remove("--lm")
+        return serve.main(argv or [
+            "--arch", "dbrx_132b", "--batch", "4",
+            "--prompt-len", "64", "--decode-tokens", "32",
+        ])
+    return serve_relational.main(argv or [
+        "--n-fact", "1000", "--trees", "4", "--requests", "1000",
     ])
 
 

@@ -281,19 +281,17 @@ class Booster:
     # ------------------------------------------------------------ serving --
     def predict_grouped(self, trees: List[TreeArrays], group_by: str):
         """Per-row-of-`group_by` (Σ ŷ(x), count) over x ∈ ρ⋈J — relational
-        scoring without materializing J (data-pipeline integration)."""
-        ar = Arithmetic()
-        tot = jnp.zeros((self.schema.table(group_by).n_rows,), jnp.float32)
-        for t in trees:
-            lm = self._leaf_masks(t)
+        scoring without materializing J.  Delegates to the serving
+        subsystem's compiled one-pass scorer (serving/compile.py); the
+        seed per-leaf loop survives as serving.score_grouped_reference."""
+        from ..serving import compile_ensemble, score_grouped
 
-            def body(a, acc, lm=lm, t=t):
-                f = {
-                    tn: ar.mask(jnp.ones((self.schema.table(tn).n_rows,)), lm[tn][a])
-                    for tn in lm
-                }
-                return acc + t.leaf[a] * self.sp(ar, f, group_by=group_by)
-
-            tot = jax.lax.fori_loop(0, t.leaf.shape[0], body, tot)
-        cnt = self.sp(ar, self.sp.ones_factors(ar), group_by=group_by)
-        return tot, cnt
+        # compile-once cache: the held tuple keeps strong refs to the
+        # trees, so the id-based key cannot be reused by a different
+        # (garbage-collected-then-reallocated) ensemble
+        key = tuple(id(t) for t in trees)
+        cached = getattr(self, "_compiled", None)
+        if cached is None or cached[0] != key:
+            ens = compile_ensemble(self.schema, trees, counter=self.counter)
+            self._compiled = cached = (key, tuple(trees), ens)
+        return score_grouped(cached[2], group_by)

@@ -81,12 +81,20 @@ class TokenPipeline:
         rng = np.random.default_rng((self.seed, step, mine))
         if self.make_batch is not None:
             return self.make_batch(rng, per, S)
-        toks = self.gen.batch(rng, per, S)
         if self.weights is not None:
-            # importance-sample rows by relational quality scores
+            # importance-sample corpus docs by relational quality scores,
+            # then synthesize each selected doc deterministically (same doc
+            # id → same token row, across steps and hosts).  Skewed weights
+            # repeat docs, so generate once per unique doc and index back.
             p = self.weights / self.weights.sum()
             keep = rng.choice(len(p), size=per, p=p)
-            _ = keep  # row selection indexes an upstream corpus shard
+            uniq, inv = np.unique(keep, return_inverse=True)
+            rows = np.stack([
+                self.gen.batch(np.random.default_rng((self.seed, int(d))), 1, S)[0]
+                for d in uniq
+            ])
+            return {"tokens": rows[inv], "doc_ids": keep.astype(np.int64)}
+        toks = self.gen.batch(rng, per, S)
         return {"tokens": toks}
 
     def _producer(self):
@@ -110,10 +118,13 @@ class TokenPipeline:
 def relational_example_weights(booster, trees, group_table: str) -> np.ndarray:
     """Per-row data-quality weights from a relationally-trained booster.
 
-    predict_grouped evaluates Σŷ over ρ⋈J per fact row with SumProd
-    queries only (no join materialization) — the paper's algorithm as a
-    production data-pipeline stage."""
-    tot, cnt = booster.predict_grouped(trees, group_table)
+    Scores every fact row's Σŷ over ρ⋈J with the serving subsystem's
+    compiled one-pass scorer (no join materialization, one SumProd
+    evaluation) — the paper's algorithm as a production pipeline stage."""
+    from repro.serving import compile_ensemble, score_grouped
+
+    ens = compile_ensemble(booster.schema, trees)
+    tot, cnt = score_grouped(ens, group_table)
     score = np.asarray(tot) / np.maximum(np.asarray(cnt), 1.0)
     w = np.exp(score - score.max())
     return w / w.sum()

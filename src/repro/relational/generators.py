@@ -81,6 +81,65 @@ def star_schema(
     return Schema([ft] + dim_tables, label=("fact", "y"))
 
 
+def snowflake_schema(
+    seed: int = 0,
+    n_fact: int = 512,
+    n_dim: int = 32,
+    n_sub: int = 8,
+    n_dim_tables: int = 2,
+    feats_per_dim: int = 1,
+    feats_per_sub: int = 1,
+    fact_feats: int = 1,
+    label_kind: str = "piecewise",
+) -> Schema:
+    """Star with normalized dimensions: fact ⋈ dim_i ⋈ sub_i.
+
+    Each dimension table carries a foreign key into its own
+    sub-dimension table (two join hops from the fact table) — the
+    deepest acyclic shape the serving tests exercise.
+    """
+    rng = np.random.default_rng(seed)
+    fact = {}
+    dims, subs = [], []
+    for di in range(n_dim_tables):
+        kc, sc = f"k{di}", f"s{di}"
+        fact[kc] = rng.integers(0, n_dim, n_fact).astype(np.int64)
+        scols = {sc: np.arange(n_sub, dtype=np.int64)}
+        for fi in range(feats_per_sub):
+            scols[f"s{di}f{fi}"] = rng.standard_normal(n_sub).astype(np.float32)
+        subs.append(Table(
+            name=f"sub{di}", columns=scols,
+            feature_columns=tuple(f"s{di}f{fi}" for fi in range(feats_per_sub)),
+        ))
+        dcols = {kc: np.arange(n_dim, dtype=np.int64),
+                 sc: rng.integers(0, n_sub, n_dim).astype(np.int64)}
+        for fi in range(feats_per_dim):
+            dcols[f"d{di}f{fi}"] = rng.standard_normal(n_dim).astype(np.float32)
+        dims.append(Table(name=f"dim{di}", columns=dcols))
+    for fi in range(fact_feats):
+        fact[f"x{fi}"] = rng.standard_normal(n_fact).astype(np.float32)
+
+    # label depends on features across all three levels
+    feats = {f"x{fi}": fact[f"x{fi}"] for fi in range(fact_feats)}
+    for di in range(n_dim_tables):
+        dk = fact[f"k{di}"]
+        sk = dims[di].columns[f"s{di}"][dk]
+        for fi in range(feats_per_dim):
+            feats[f"d{di}f{fi}"] = dims[di].columns[f"d{di}f{fi}"][dk]
+        for fi in range(feats_per_sub):
+            feats[f"s{di}f{fi}"] = subs[di].columns[f"s{di}f{fi}"][sk]
+    fact["y"] = _label(rng, feats, label_kind)
+
+    ft = Table(name="fact", columns=fact,
+               feature_columns=tuple(f"x{fi}" for fi in range(fact_feats)))
+    dim_tables = [
+        Table(name=d.name, columns=d.columns,
+              feature_columns=tuple(c for c in d.columns if c.startswith("d")))
+        for d in dims
+    ]
+    return Schema([ft] + dim_tables + subs, label=("fact", "y"))
+
+
 def chain_schema(
     seed: int = 0,
     n_rows: int = 256,

@@ -1,0 +1,23 @@
+"""Serving: compiled ensembles, one-pass batched scoring, micro-batching.
+
+    compile_ensemble / CompiledEnsemble  — stacked-leaf one-pass scorer
+    score_grouped / score_rows / score_fresh — jitted entry points
+    score_grouped_reference              — seed per-leaf loop (baseline)
+    ModelRegistry / RelationalScoringService — versioned hot-swap + batcher
+"""
+from .compile import CompiledEnsemble, KernelChannels, compile_ensemble
+from .scorer import (
+    score_fresh,
+    score_grouped,
+    score_grouped_reference,
+    score_mean_rows,
+    score_rows,
+)
+from .service import LRUCache, ModelRegistry, RelationalScoringService, ServiceStats
+
+__all__ = [
+    "CompiledEnsemble", "KernelChannels", "compile_ensemble",
+    "score_fresh", "score_grouped", "score_grouped_reference",
+    "score_mean_rows", "score_rows",
+    "LRUCache", "ModelRegistry", "RelationalScoringService", "ServiceStats",
+]

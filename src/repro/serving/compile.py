@@ -1,0 +1,144 @@
+"""Compile a trained ensemble into a one-pass relational scorer.
+
+The seed scoring path (``Booster.predict_grouped``) walks tree × leaf
+inside a ``fori_loop`` and issues one Arithmetic SumProd pass per leaf
+per tree — O(n_trees · L) sequential inside-out passes per request.
+Serving inverts that: compilation stacks **every leaf of every tree**
+into one channel axis.
+
+For each table T_t the per-leaf membership masks (L, n_rows) of all
+trees concatenate into a single (total_leaves, n_rows) array; its
+transpose, cast to f32, is T_t's factor in a ``Channels(total_leaves)``
+product semiring.  ONE inside-out pass grouped by ρ's table then yields
+
+    counts[ρ, a] = |{x ∈ ρ ⋈ J : x in leaf a}|        (all a at once)
+
+and the served quantities are two dense contractions:
+
+    Σŷ[ρ]  = counts[ρ, :] @ leaf_values                 (boosted sum)
+    |ρ⋈J|  = Σ_{a ∈ leaves of tree 0} counts[ρ, a]      (any one tree
+              partitions J, so its leaf counts sum to the group size)
+
+SumProd evaluations per request drop from n_trees·L + 1 to **1**; the
+wide segment-⊕ that remains is a dense (n_rows, total_leaves) segment
+sum — optionally routed through the Pallas one-hot-matmul kernel
+(`kernels/segment_sum`, same MXU reformulation as `count_sketch`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.schema import Schema
+from ..core.semiring import Channels
+from ..core.sumprod import QueryCounter, SumProd
+from ..core.tree import TreeArrays, all_tables_leaf_masks
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelChannels(Channels):
+    """Channels semiring whose segment-⊕ runs on the Pallas kernel."""
+
+    interpret: bool = True
+
+    def segment_add(self, vals, segment_ids, num_segments):
+        from ..kernels.segment_sum.ops import segment_sum_op
+
+        if vals.ndim == 2 and vals.dtype == jnp.float32:
+            return segment_sum_op(vals, segment_ids, num_segments,
+                                  interpret=self.interpret)
+        return super().segment_add(vals, segment_ids, num_segments)
+
+
+@dataclasses.dataclass
+class CompiledEnsemble:
+    """A trained ensemble lowered to single-pass relational scoring.
+
+    factors: per-table (n_rows, total_leaves) f32 — stacked leaf masks,
+    ready to drop into a Channels(total_leaves) SumProd query.
+    """
+
+    schema: Schema
+    trees: List[TreeArrays]
+    leaf_values: jnp.ndarray               # (total_leaves,)
+    factors: Dict[str, jnp.ndarray]        # table → (n_rows, total_leaves)
+    tree0_leaves: int                      # leaves of tree 0 (for counts)
+    use_kernel: bool = False
+    counter: Optional[QueryCounter] = None
+
+    def __post_init__(self):
+        self._sp = SumProd(self.schema)
+        self._sem = (
+            KernelChannels(self.total_leaves)
+            if self.use_kernel else Channels(self.total_leaves)
+        )
+        self._score_fns: Dict[str, callable] = {}
+        self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    @property
+    def total_leaves(self) -> int:
+        return int(self.leaf_values.shape[0])
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.trees)
+
+    # ----------------------------------------------------------- scoring --
+    def _score_fn(self, group_by: str):
+        """Jitted one-pass scorer for one grouping table (compile-once)."""
+        if group_by not in self._score_fns:
+            sp, sem, L0 = self._sp, self._sem, self.tree0_leaves
+
+            @jax.jit
+            def run(factors, vals):
+                counts = sp(sem, factors, group_by=group_by)   # (n_g, A)
+                tot = counts @ vals
+                cnt = jnp.sum(counts[:, :L0], axis=1)
+                return tot, cnt
+
+            self._score_fns[group_by] = run
+        return self._score_fns[group_by]
+
+    def score_grouped(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(Σŷ, |ρ⋈J|) per row of ``group_by`` — ONE SumProd evaluation."""
+        if self.counter is not None:
+            self.counter.bump(1)
+        return self._score_fn(group_by)(self.factors, self.leaf_values)
+
+    def grouped_cached(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Memoized full-table scores: tables are static per model version,
+        so interactive row lookups reduce to gathers into this pass."""
+        if group_by not in self._grouped:
+            self._grouped[group_by] = self.score_grouped(group_by)
+        return self._grouped[group_by]
+
+
+def compile_ensemble(
+    schema: Schema,
+    trees: List[TreeArrays],
+    use_kernel: bool = False,
+    counter: Optional[QueryCounter] = None,
+) -> CompiledEnsemble:
+    """Stack per-table leaf masks across all trees into channel factors."""
+    if not trees:
+        raise ValueError("cannot compile an empty ensemble")
+    per_tree = [all_tables_leaf_masks(schema, t) for t in trees]
+    factors = {
+        t.name: jnp.concatenate(
+            [pm[t.name] for pm in per_tree], axis=0
+        ).T.astype(jnp.float32)                      # (n_rows, total_leaves)
+        for t in schema.tables
+    }
+    leaf_values = jnp.concatenate([t.leaf for t in trees]).astype(jnp.float32)
+    return CompiledEnsemble(
+        schema=schema,
+        trees=list(trees),
+        leaf_values=leaf_values,
+        factors=factors,
+        tree0_leaves=int(trees[0].leaf.shape[0]),
+        use_kernel=use_kernel,
+        counter=counter,
+    )

@@ -1,0 +1,232 @@
+"""Async micro-batching front end for the compiled relational scorer.
+
+Request path: ``await service.score(row_id)`` enqueues a future; the
+batcher task drains the queue, coalescing up to ``max_batch`` requests
+or until ``max_wait_ms`` elapses since the batch opened, runs ONE jitted
+``score_rows`` gather per (model version) group, and resolves the
+futures.  An LRU cache keyed by (version, row_id) short-circuits repeat
+traffic before it ever reaches the queue.
+
+Model lifecycle: a :class:`ModelRegistry` holds versioned
+:class:`CompiledEnsemble`s; ``publish`` atomically installs a freshly
+boosted model as latest — in-flight requests keep the version they were
+enqueued with, new requests pick up the swap (zero-downtime hot swap).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .compile import CompiledEnsemble
+from .scorer import score_mean_rows
+
+
+class LRUCache:
+    """Bounded (version, row_id) → score cache with hit/miss stats."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if self.capacity <= 0 or key not in self._d:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return self._d[key]
+
+    def put(self, key, value):
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self):
+        return len(self._d)
+
+
+class ModelRegistry:
+    """Versioned store of compiled ensembles (monotonic version ids).
+
+    ``max_versions`` bounds resident models: publishing beyond it evicts
+    the oldest versions (their factors are the dominant memory cost in a
+    long-running service).  Requests pinned to an evicted version fail
+    with KeyError — pin only within a swap window."""
+
+    def __init__(self, max_versions: int = 8):
+        self.max_versions = max_versions
+        self._models: Dict[int, CompiledEnsemble] = {}
+        self._latest: Optional[int] = None
+        self._ids = itertools.count(1)
+
+    def publish(self, ensemble: CompiledEnsemble) -> int:
+        """Install a new model version and make it the serving default."""
+        v = next(self._ids)
+        self._models[v] = ensemble
+        self._latest = v
+        while len(self._models) > self.max_versions:
+            self._models.pop(min(self._models))
+        return v
+
+    def latest_version(self) -> int:
+        if self._latest is None:
+            raise LookupError("registry is empty — publish a model first")
+        return self._latest
+
+    def get(self, version: Optional[int] = None) -> Tuple[int, CompiledEnsemble]:
+        v = self.latest_version() if version is None else version
+        return v, self._models[v]
+
+    def versions(self) -> List[int]:
+        return sorted(self._models)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    batched_rows: int = 0
+    cache_hits: int = 0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.batched_rows / max(self.batches, 1)
+
+
+class _Request:
+    __slots__ = ("row_id", "version", "future")
+
+    def __init__(self, row_id: int, version: int, future: "asyncio.Future"):
+        self.row_id = row_id
+        self.version = version
+        self.future = future
+
+
+class RelationalScoringService:
+    """Queue → coalesce → jitted batched scorer → dispatch futures."""
+
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        group_by: str,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        cache_size: int = 4096,
+    ):
+        self.registry = registry
+        self.group_by = group_by
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.cache = LRUCache(cache_size)
+        self.stats = ServiceStats()
+        self._q: "asyncio.Queue" = asyncio.Queue()
+        self._task: Optional["asyncio.Task"] = None
+
+    # -------------------------------------------------------------- control --
+    async def start(self):
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def stop(self):
+        if self._task is not None:
+            await self._q.put(None)
+            await self._task
+            self._task = None
+        # fail any request that raced in behind the stop sentinel rather
+        # than leaving its caller awaiting forever
+        while not self._q.empty():
+            item = self._q.get_nowait()
+            if item is not None and not item.future.done():
+                item.future.set_exception(RuntimeError("service stopped"))
+
+    # -------------------------------------------------------------- serving --
+    async def score(self, row_id: int, version: Optional[int] = None) -> float:
+        """Mean prediction Σŷ/count for one row of ``group_by``."""
+        if self._task is None or self._task.done():
+            raise RuntimeError("service not running — call start() first")
+        v = self.registry.latest_version() if version is None else version
+        # validate per request (a bad id inside a coalesced batch must not
+        # fail its co-batched neighbours); rejected requests don't count
+        n = self.registry.get(v)[1].schema.table(self.group_by).n_rows
+        if not 0 <= row_id < n:
+            raise IndexError(
+                f"row id {row_id} out of range for table {self.group_by!r} (n_rows={n})"
+            )
+        self.stats.requests += 1
+        cached = self.cache.get((v, row_id))
+        if cached is not None:
+            self.stats.cache_hits += 1
+            return cached
+        fut = asyncio.get_running_loop().create_future()
+        await self._q.put(_Request(int(row_id), v, fut))
+        return await fut
+
+    async def score_many(self, row_ids, version: Optional[int] = None) -> List[float]:
+        return list(await asyncio.gather(
+            *(self.score(r, version) for r in row_ids)
+        ))
+
+    # -------------------------------------------------------------- batcher --
+    async def _collect(self) -> Optional[List[_Request]]:
+        """One coalescing window: first request opens the batch, then fill
+        until max_batch or the max_wait deadline."""
+        first = await self._q.get()
+        if first is None:
+            return None
+        batch = [first]
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + self.max_wait
+        while len(batch) < self.max_batch:
+            try:                             # greedy drain: no await overhead
+                item = self._q.get_nowait()
+            except asyncio.QueueEmpty:
+                timeout = deadline - loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    item = await asyncio.wait_for(self._q.get(), timeout)
+                except asyncio.TimeoutError:
+                    break
+            if item is None:
+                await self._q.put(None)     # re-post the stop sentinel
+                break
+            batch.append(item)
+        return batch
+
+    def _dispatch(self, batch: List[_Request]):
+        by_version: Dict[int, List[_Request]] = {}
+        for r in batch:
+            by_version.setdefault(r.version, []).append(r)
+        for v, reqs in by_version.items():
+            _, ens = self.registry.get(v)
+            ids = np.asarray([r.row_id for r in reqs], np.int32)
+            mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
+            for r, m in zip(reqs, mean):
+                val = float(m)
+                self.cache.put((v, r.row_id), val)
+                if not r.future.done():
+                    r.future.set_result(val)
+        self.stats.batches += 1
+        self.stats.batched_rows += len(batch)
+
+    async def _run(self):
+        while True:
+            batch = await self._collect()
+            if batch is None:
+                return
+            try:
+                self._dispatch(batch)
+            except Exception as e:      # propagate to the callers, keep serving
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)

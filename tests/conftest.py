@@ -7,7 +7,15 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import materialize_join
-from repro.relational.generators import star_schema, chain_schema
+from repro.relational.generators import chain_schema, snowflake_schema, star_schema
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight test deselected by default (pytest.ini addopts); "
+        "run the full suite with `pytest -m \"\"`",
+    )
 
 
 @pytest.fixture(scope="session")
@@ -22,6 +30,15 @@ def star():
 @pytest.fixture(scope="session")
 def chain():
     sch = chain_schema(seed=9, n_rows=128, n_tables=3, fanout=3)
+    J = materialize_join(sch)
+    X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
+    y = J[sch.label_column]
+    return sch, J, X, y
+
+
+@pytest.fixture(scope="session")
+def snowflake():
+    sch = snowflake_schema(seed=3, n_fact=200, n_dim=16, n_sub=4)
     J = materialize_join(sch)
     X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
     y = J[sch.label_column]

@@ -22,7 +22,16 @@ def _batch(cfg, key, B=2, S=32):
     return b
 
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
+# the heaviest reduced configs on CPU (see --durations); deselected from
+# tier-1 by the default `-m "not slow"` addopts, run via `pytest -m ""`
+_HEAVY = {"hymba_1_5b", "qwen2_5_32b", "dbrx_132b", "seamless_m4t_medium",
+          "rwkv6_1_6b", "llava_next_34b"}
+_mark_heavy = lambda archs: [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a for a in archs
+]
+
+
+@pytest.mark.parametrize("arch", _mark_heavy(configs.ARCHS))
 def test_train_step_smoke(arch):
     cfg = configs.get_smoke(arch)
     model = Model(cfg)
@@ -46,9 +55,9 @@ def test_train_step_smoke(arch):
     assert full.n_layers >= cfg.n_layers
 
 
-@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "dbrx_132b", "rwkv6_1_6b",
-                                  "hymba_1_5b", "seamless_m4t_medium",
-                                  "llava_next_34b"])
+@pytest.mark.parametrize("arch", _mark_heavy(
+    ["tinyllama_1_1b", "dbrx_132b", "rwkv6_1_6b", "hymba_1_5b",
+     "seamless_m4t_medium", "llava_next_34b"]))
 def test_prefill_decode_consistency(arch):
     """decode_step after prefill(S) must reproduce the forward logits the
     train path computes at position S (same weights, same prefix)."""

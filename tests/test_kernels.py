@@ -53,6 +53,35 @@ def test_count_sketch(n, k):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
 
 
+@pytest.mark.parametrize("n,keys,c", [(100, 16, 8), (1000, 64, 32), (513, 40, 1)])
+def test_segment_sum(n, keys, c):
+    from repro.kernels.segment_sum.ops import segment_sum_op
+    from repro.kernels.segment_sum.ref import segment_sum_ref
+
+    rng = np.random.default_rng(n + keys)
+    vals = jnp.asarray(rng.standard_normal((n, c)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, keys, n), jnp.int32)
+    got = segment_sum_op(vals, ids, keys)
+    want = segment_sum_ref(vals, ids, keys)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # 1-D (Arithmetic semiring) layout
+    got1 = segment_sum_op(vals[:, 0], ids, keys)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want)[:, 0], atol=1e-4)
+
+
+def test_segment_sum_is_semiring_segment_add():
+    """Kernel-routed Channels.segment_add == the stock semiring op."""
+    from repro.serving import KernelChannels
+    from repro.core.semiring import Channels
+
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.standard_normal((200, 12)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 9, 200), jnp.int32)
+    got = KernelChannels(12).segment_add(vals, ids, 9)
+    want = Channels(12).segment_add(vals, ids, 9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
 @pytest.mark.parametrize("S,dh,causal", [(128, 64, True), (256, 128, True),
                                          (128, 64, False), (96, 32, True)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -5,7 +5,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     Hash2, PolyCoeff, PolyFreq, SumProd, TableHashes, count_sketch_dense,

@@ -121,6 +121,7 @@ def test_pipeline_deterministic_and_reassign():
     assert n0 == 3 and n1 == 4, (n0, n1)  # remaining hosts absorb the shard
 
 
+@pytest.mark.slow
 def test_grad_compression_unbiased_and_converges():
     from repro.optim.grad_compress import CountSketchCompressor
 
@@ -146,6 +147,7 @@ def test_grad_compression_unbiased_and_converges():
     assert comp.compressed_bytes({"w": w}) <= 512 * 4 / 4  # ≥4× smaller
 
 
+@pytest.mark.slow
 def test_sharded_sumprod_subprocess():
     """Row-sharded inside-out == single-device engine (8 devices, star +
     chain schemas, arithmetic/channels/tropical)."""
@@ -185,6 +187,7 @@ def test_sharded_sumprod_subprocess():
     assert "SHARDED_OK" in r.stdout, r.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_train_driver_checkpoint_resume(tmp_path):
     """End-to-end driver twice: run 6 steps with a checkpoint at 4, then
     resume from 4 and confirm continuation (production restart path)."""

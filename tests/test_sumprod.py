@@ -4,7 +4,10 @@ semirings (the engine must be semiring-generic: Lemma 1.1)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     Arithmetic, BooleanSR, Channels, NotAcyclicError, Schema, SumProd, Table,
