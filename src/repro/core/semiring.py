@@ -117,9 +117,14 @@ class Channels(_ModuleSemiring):
     The paper's node statistics (n, Σy, Σy²) are three SumProd queries whose
     per-feature terms differ only at the label column — they fuse into one
     pass over the (R^3, +, ⊙) product semiring.
+
+    ``dtype`` is configurable: the serving factors are 0/1 leaf masks, so
+    bf16 channels halve factor memory/bandwidth at a bounded count error
+    (see serving/compile.py ``factor_dtype``).
     """
 
     channels: int = 3
+    dtype: "jnp.dtype" = jnp.float32
 
     @property
     def value_shape(self):  # type: ignore[override]

@@ -83,17 +83,22 @@ def predict_rows(trees: List[TreeArrays], X: jnp.ndarray, lr: float = 1.0) -> jn
 # Relational masks
 # ---------------------------------------------------------------------------
 
-def _local_feature_view(schema: Schema, table: str):
-    """(g2l, featmat): map global feature id → local column, -1 if foreign."""
+def _local_feature_view(schema: Schema, table: str, featmat=None):
+    """(g2l, featmat): map global feature id → local column, -1 if foreign.
+
+    ``featmat`` overrides the schema's device-resident (n_rows, d_t)
+    matrix — used by incremental maintenance to evaluate masks for just a
+    delta's rows (same columns, arbitrary row subset)."""
     g2l = -jnp.ones((max(schema.n_features, 1),), jnp.int32)
     for g, (ti, li) in enumerate(schema.feat_global):
         if schema.tables[ti].name == table:
             g2l = g2l.at[g].set(li)
-    return g2l, schema.featmat[table]
+    return g2l, schema.featmat[table] if featmat is None else featmat
 
 
 def descend_masks_level(
-    schema: Schema, table: str, feat: jnp.ndarray, thr: jnp.ndarray, masks: jnp.ndarray
+    schema: Schema, table: str, feat: jnp.ndarray, thr: jnp.ndarray, masks: jnp.ndarray,
+    featmat=None,
 ) -> jnp.ndarray:
     """One level of mask refinement for ``table``.
 
@@ -101,7 +106,7 @@ def descend_masks_level(
     (2K, n_rows).  Constraints on foreign features pass both children
     through; dead nodes (feat = -1, thr = +inf) route everything left.
     """
-    g2l, fm = _local_feature_view(schema, table)
+    g2l, fm = _local_feature_view(schema, table, featmat)
     local = jnp.take(g2l, jnp.maximum(feat, 0)) * jnp.where(feat >= 0, 1, 0) + jnp.where(
         feat >= 0, 0, -1
     )
@@ -113,17 +118,22 @@ def descend_masks_level(
     return jnp.stack([left, right], axis=1).reshape(-1, masks.shape[-1])
 
 
-def root_masks(schema: Schema, table: str) -> jnp.ndarray:
-    n = schema.table(table).n_rows
+def root_masks(schema: Schema, table: str, n_rows: int = None) -> jnp.ndarray:
+    n = schema.table(table).n_rows if n_rows is None else n_rows
     return jnp.ones((1, n), jnp.bool_)
 
 
-def leaf_masks(schema: Schema, table: str, tree: TreeArrays) -> jnp.ndarray:
-    """(L, n_rows) bool: per-table projection of every leaf's J^{(ℓ)}."""
-    m = root_masks(schema, table)
+def leaf_masks(schema: Schema, table: str, tree: TreeArrays, featmat=None) -> jnp.ndarray:
+    """(L, n_rows) bool: per-table projection of every leaf's J^{(ℓ)}.
+
+    With ``featmat`` (k, d_t), masks are evaluated for those k feature
+    rows instead of the whole stored table (the per-row ops are identical,
+    so subset rows match the full-table pass bit-for-bit)."""
+    m = root_masks(schema, table,
+                   None if featmat is None else int(featmat.shape[0]))
     for level in range(tree.depth):
         feat, thr = tree.level_slice(level)
-        m = descend_masks_level(schema, table, feat, thr, m)
+        m = descend_masks_level(schema, table, feat, thr, m, featmat)
     return m
 
 

@@ -1,0 +1,11 @@
+"""Incremental view maintenance for the relational serving subsystem.
+
+    TableDelta                    — typed insert/delete/update batch
+    DynamicTable / DynamicEdge    — capacity-padded mutable store + keys
+    MaintainedScorer              — delta-driven factors, path-restricted
+                                    message refresh, versioned memo
+"""
+from .deltas import DynamicEdge, DynamicTable, TableDelta
+from .maintain import MaintainedScorer
+
+__all__ = ["DynamicEdge", "DynamicTable", "TableDelta", "MaintainedScorer"]

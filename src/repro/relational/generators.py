@@ -8,9 +8,12 @@ boosted regressor has real signal to recover.
 """
 from __future__ import annotations
 
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
+
 import numpy as np
 
 from repro.core.schema import Schema, Table
+from repro.incremental.deltas import TableDelta
 
 
 def _label(rng, feats, kind: str):
@@ -181,3 +184,110 @@ def chain_schema(
         fc = tuple(c for c in cols if c.startswith(f"t{ti}f"))
         out.append(Table(name=f"t{ti}", columns=cols, feature_columns=fc))
     return Schema(out, label=("t0", "y"))
+
+
+# ---------------------------------------------------------------------------
+# Delta streams (incremental-maintenance workloads)
+# ---------------------------------------------------------------------------
+
+def _key_columns(schema: Schema) -> set:
+    """Join-key columns under natural-join semantics: any column name
+    appearing in more than one table."""
+    seen, keys = set(), set()
+    for t in schema.tables:
+        for c in t.columns:
+            (keys if c in seen else seen).add(c)
+    return keys
+
+
+def delta_stream(
+    schema: Schema,
+    live_of: Callable[[str], np.ndarray],
+    seed: int = 0,
+    n_batches: int = 8,
+    ops_per_batch: int = 6,
+    tables: Optional[Sequence[str]] = None,
+    p_insert: float = 0.35,
+    p_delete: float = 0.3,
+    new_key_prob: float = 0.15,
+    min_live: int = 4,
+) -> Iterator[List[TableDelta]]:
+    """Random insert/delete/update batches against a live relational DB.
+
+    ``live_of(table)`` must return the CURRENT live slot ids (deltas are
+    generated lazily per batch, after the caller applied the previous
+    one — e.g. ``ms.live_rows``).  Inserted key values are drawn from
+    the observed key domain, except with ``new_key_prob`` a previously
+    unseen key is minted (exercising the append-only key dictionaries);
+    updates rewrite the non-key feature columns of live rows.  Deletes
+    never shrink a table below ``min_live`` rows.
+    """
+    rng = np.random.default_rng(seed)
+    key_cols = _key_columns(schema)
+    names = [t.name for t in (schema.tables if tables is None
+                              else [schema.table(n) for n in tables])]
+    # observed key domains (grown as new keys are minted)
+    domains: Dict[str, np.ndarray] = {}
+    for t in schema.tables:
+        for c in t.columns:
+            if c in key_cols:
+                vals = np.unique(np.asarray(t.col(c)))
+                domains[c] = (np.union1d(domains[c], vals)
+                              if c in domains else vals)
+
+    def _insert_row(t: Table) -> Dict[str, np.ndarray]:
+        row = {}
+        for c, v in t.columns.items():
+            v = np.asarray(v)
+            if c in key_cols:
+                if rng.random() < new_key_prob:
+                    nk = domains[c].max() + int(rng.integers(1, 4))
+                    domains[c] = np.append(domains[c], nk)
+                    row[c] = np.asarray([nk], v.dtype)
+                else:
+                    row[c] = np.asarray([rng.choice(domains[c])], v.dtype)
+            else:
+                row[c] = rng.standard_normal(1).astype(v.dtype)
+        return row
+
+    for _ in range(n_batches):
+        per_table: Dict[str, Dict] = {
+            n: {"ins": [], "del": set(), "upd": set()} for n in names
+        }
+        for _ in range(ops_per_batch):
+            name = names[int(rng.integers(len(names)))]
+            t = schema.table(name)
+            acc = per_table[name]
+            r = rng.random()
+            live = np.setdiff1d(live_of(name), np.fromiter(
+                acc["del"] | acc["upd"], np.int64, len(acc["del"]) + len(acc["upd"])
+            ))
+            if r < p_insert or len(live) <= min_live:
+                acc["ins"].append(_insert_row(t))
+            elif r < p_insert + p_delete:
+                acc["del"].add(int(rng.choice(live)))
+            else:
+                acc["upd"].add(int(rng.choice(live)))
+        batch: List[TableDelta] = []
+        for name, acc in per_table.items():
+            t = schema.table(name)
+            inserts = deletes = updates = None
+            if acc["ins"]:
+                inserts = {c: np.concatenate([r[c] for r in acc["ins"]])
+                           for c in t.columns}
+            if acc["del"]:
+                deletes = np.asarray(sorted(acc["del"]), np.int64)
+            if acc["upd"]:
+                slots = np.asarray(sorted(acc["upd"]), np.int64)
+                upd_cols = [c for c in t.feature_columns if c not in key_cols]
+                if upd_cols:
+                    updates = (slots, {
+                        c: rng.standard_normal(len(slots)).astype(
+                            np.asarray(t.col(c)).dtype)
+                        for c in upd_cols
+                    })
+            if inserts or deletes is not None or updates is not None:
+                batch.append(TableDelta(table=name, inserts=inserts,
+                                        deletes=deletes, updates=updates))
+        if batch:
+            yield batch

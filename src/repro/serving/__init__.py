@@ -5,7 +5,10 @@
     score_grouped_reference              — seed per-leaf loop (baseline)
     ModelRegistry / RelationalScoringService — versioned hot-swap + batcher
 """
-from .compile import CompiledEnsemble, KernelChannels, compile_ensemble
+from .compile import (
+    CompiledEnsemble, KernelChannels, compile_ensemble, stack_table_factor,
+)
+from .multi import StackedEnsembles, stack_ensembles
 from .scorer import (
     score_fresh,
     score_grouped,
@@ -16,7 +19,8 @@ from .scorer import (
 from .service import LRUCache, ModelRegistry, RelationalScoringService, ServiceStats
 
 __all__ = [
-    "CompiledEnsemble", "KernelChannels", "compile_ensemble",
+    "CompiledEnsemble", "KernelChannels", "compile_ensemble", "stack_table_factor",
+    "StackedEnsembles", "stack_ensembles",
     "score_fresh", "score_grouped", "score_grouped_reference",
     "score_mean_rows", "score_rows",
     "LRUCache", "ModelRegistry", "RelationalScoringService", "ServiceStats",

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from ..core.schema import Schema
 from ..core.semiring import Channels
 from ..core.sumprod import QueryCounter, SumProd
-from ..core.tree import TreeArrays, all_tables_leaf_masks
+from ..core.tree import TreeArrays, leaf_masks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +53,35 @@ class KernelChannels(Channels):
         return super().segment_add(vals, segment_ids, num_segments)
 
 
+def stack_table_factor(
+    schema: Schema,
+    trees: List[TreeArrays],
+    table: str,
+    featmat: Optional[jnp.ndarray] = None,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Stacked leaf-mask factor for one table: (n_rows, total_leaves).
+
+    With ``featmat`` (k, d_t), only those k feature rows are evaluated —
+    the per-row factor slice incremental maintenance scatters back into a
+    live factor after a delta."""
+    per_tree = [leaf_masks(schema, table, t, featmat=featmat) for t in trees]
+    return jnp.concatenate(per_tree, axis=0).T.astype(dtype)
+
+
 @dataclasses.dataclass
 class CompiledEnsemble:
     """A trained ensemble lowered to single-pass relational scoring.
 
-    factors: per-table (n_rows, total_leaves) f32 — stacked leaf masks,
-    ready to drop into a Channels(total_leaves) SumProd query.
+    factors: per-table (n_rows, total_leaves) — stacked leaf masks, ready
+    to drop into a Channels(total_leaves) SumProd query.  ``factor_dtype``
+    selects their storage dtype: f32 (exact counts) or bf16 (masks are
+    0/1, so bf16 halves factor memory at a small count error bounded by
+    the 8-bit mantissa — served totals stay within benchmark tolerance).
+
+    ``data_version`` is bumped by whoever mutates served state in place
+    (incremental/maintain.py) — caches keyed on it can never serve stale
+    scores after a delta.
     """
 
     schema: Schema
@@ -68,12 +91,14 @@ class CompiledEnsemble:
     tree0_leaves: int                      # leaves of tree 0 (for counts)
     use_kernel: bool = False
     counter: Optional[QueryCounter] = None
+    factor_dtype: "jnp.dtype" = jnp.float32
+    data_version: int = 0
 
     def __post_init__(self):
         self._sp = SumProd(self.schema)
         self._sem = (
-            KernelChannels(self.total_leaves)
-            if self.use_kernel else Channels(self.total_leaves)
+            KernelChannels(self.total_leaves, self.factor_dtype)
+            if self.use_kernel else Channels(self.total_leaves, self.factor_dtype)
         )
         self._score_fns: Dict[str, callable] = {}
         self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
@@ -86,6 +111,11 @@ class CompiledEnsemble:
     def n_trees(self) -> int:
         return len(self.trees)
 
+    def n_rows(self, table: str) -> int:
+        """Row-id domain of ``table``'s factor (== schema n_rows here;
+        capacity for maintained scorers — keeps id validation duck-typed)."""
+        return int(self.factors[table].shape[0])
+
     # ----------------------------------------------------------- scoring --
     def _score_fn(self, group_by: str):
         """Jitted one-pass scorer for one grouping table (compile-once)."""
@@ -95,8 +125,8 @@ class CompiledEnsemble:
             @jax.jit
             def run(factors, vals):
                 counts = sp(sem, factors, group_by=group_by)   # (n_g, A)
-                tot = counts @ vals
-                cnt = jnp.sum(counts[:, :L0], axis=1)
+                tot = (counts @ vals).astype(jnp.float32)
+                cnt = jnp.sum(counts[:, :L0], axis=1).astype(jnp.float32)
                 return tot, cnt
 
             self._score_fns[group_by] = run
@@ -121,15 +151,13 @@ def compile_ensemble(
     trees: List[TreeArrays],
     use_kernel: bool = False,
     counter: Optional[QueryCounter] = None,
+    factor_dtype=jnp.float32,
 ) -> CompiledEnsemble:
     """Stack per-table leaf masks across all trees into channel factors."""
     if not trees:
         raise ValueError("cannot compile an empty ensemble")
-    per_tree = [all_tables_leaf_masks(schema, t) for t in trees]
     factors = {
-        t.name: jnp.concatenate(
-            [pm[t.name] for pm in per_tree], axis=0
-        ).T.astype(jnp.float32)                      # (n_rows, total_leaves)
+        t.name: stack_table_factor(schema, trees, t.name, dtype=factor_dtype)
         for t in schema.tables
     }
     leaf_values = jnp.concatenate([t.leaf for t in trees]).astype(jnp.float32)
@@ -141,4 +169,5 @@ def compile_ensemble(
         tree0_leaves=int(trees[0].leaf.shape[0]),
         use_kernel=use_kernel,
         counter=counter,
+        factor_dtype=factor_dtype,
     )

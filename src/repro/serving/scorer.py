@@ -45,7 +45,7 @@ def score_rows(ens: CompiledEnsemble, group_by: str, row_ids) -> Tuple[jnp.ndarr
     would silently answer a lookup for a nonexistent row with another
     row's score — a serving API must reject it instead."""
     ids = np.asarray(row_ids, np.int64)
-    n = ens.schema.table(group_by).n_rows
+    n = ens.n_rows(group_by)
     if ids.size and (ids.min() < 0 or ids.max() >= n):
         bad = ids[(ids < 0) | (ids >= n)][:5]
         raise IndexError(

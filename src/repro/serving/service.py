@@ -11,6 +11,10 @@ Model lifecycle: a :class:`ModelRegistry` holds versioned
 :class:`CompiledEnsemble`s; ``publish`` atomically installs a freshly
 boosted model as latest — in-flight requests keep the version they were
 enqueued with, new requests pick up the swap (zero-downtime hot swap).
+A published model may also be a ``MaintainedScorer`` whose state mutates
+in place under table deltas: the result cache is namespaced by
+(registry version, model ``data_version``, row id), so neither hot swaps
+nor delta updates can ever resurface a stale cached score.
 """
 from __future__ import annotations
 
@@ -68,6 +72,7 @@ class ModelRegistry:
         self._models: Dict[int, CompiledEnsemble] = {}
         self._latest: Optional[int] = None
         self._ids = itertools.count(1)
+        self._stacked_cache = None
 
     def publish(self, ensemble: CompiledEnsemble) -> int:
         """Install a new model version and make it the serving default."""
@@ -89,6 +94,18 @@ class ModelRegistry:
 
     def versions(self) -> List[int]:
         return sorted(self._models)
+
+    def stacked(self, versions: Optional[List[int]] = None):
+        """All (or the given) resident variants fused into one factor set
+        for single-pass A/B scoring (see serving/multi.py).  Cached until
+        the participating versions or their data_versions change."""
+        from .multi import stack_ensembles
+
+        vs = tuple(self.versions() if versions is None else versions)
+        key = (vs, tuple(getattr(self._models[v], "data_version", 0) for v in vs))
+        if self._stacked_cache is None or self._stacked_cache[0] != key:
+            self._stacked_cache = (key, stack_ensembles([self._models[v] for v in vs]))
+        return self._stacked_cache[1]
 
 
 @dataclasses.dataclass
@@ -154,16 +171,19 @@ class RelationalScoringService:
         """Mean prediction Σŷ/count for one row of ``group_by``."""
         if self._task is None or self._task.done():
             raise RuntimeError("service not running — call start() first")
-        v = self.registry.latest_version() if version is None else version
+        v, ens = self.registry.get(version)
         # validate per request (a bad id inside a coalesced batch must not
         # fail its co-batched neighbours); rejected requests don't count
-        n = self.registry.get(v)[1].schema.table(self.group_by).n_rows
+        n = ens.n_rows(self.group_by)
         if not 0 <= row_id < n:
             raise IndexError(
                 f"row id {row_id} out of range for table {self.group_by!r} (n_rows={n})"
             )
         self.stats.requests += 1
-        cached = self.cache.get((v, row_id))
+        # cache key includes the model's data_version: delta maintenance
+        # mutates a published MaintainedScorer in place, and a stale hit
+        # across that bump would serve pre-delta scores
+        cached = self.cache.get((v, getattr(ens, "data_version", 0), row_id))
         if cached is not None:
             self.stats.cache_hits += 1
             return cached
@@ -209,11 +229,12 @@ class RelationalScoringService:
             by_version.setdefault(r.version, []).append(r)
         for v, reqs in by_version.items():
             _, ens = self.registry.get(v)
+            dv = getattr(ens, "data_version", 0)
             ids = np.asarray([r.row_id for r in reqs], np.int32)
             mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
             for r, m in zip(reqs, mean):
                 val = float(m)
-                self.cache.put((v, r.row_id), val)
+                self.cache.put((v, dv, r.row_id), val)
                 if not r.future.done():
                     r.future.set_result(val)
         self.stats.batches += 1

@@ -1,0 +1,378 @@
+"""Incremental view maintenance: delta-driven factor updates and
+path-restricted message refresh vs the full-recompute oracle (fresh
+compile_ensemble + materialize_join over the effective live tables);
+dynamic table/edge mechanics; SumProd message-cache refactor; service
+cache invalidation across delta updates and hot swaps; stacked
+multi-model scoring; bf16 factor mode."""
+import asyncio
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Arithmetic, BoostConfig, Booster, Channels, QueryCounter, SumProd,
+    materialize_join, predict_rows,
+)
+from repro.incremental import DynamicTable, MaintainedScorer, TableDelta
+from repro.relational.generators import (
+    chain_schema, delta_stream, snowflake_schema, star_schema,
+)
+from repro.serving import (
+    ModelRegistry, RelationalScoringService, compile_ensemble, score_grouped,
+    stack_ensembles,
+)
+
+
+def _fit(sch, n_trees=2, depth=2):
+    b = Booster(sch, BoostConfig(n_trees=n_trees, depth=depth,
+                                 mode="sketch", ssr_mode="off"))
+    return b.fit()[0]
+
+
+@pytest.fixture(scope="module")
+def star_trees(star):
+    return _fit(star[0], n_trees=3)
+
+
+def _small(fixture):
+    if fixture == "star":
+        return star_schema(seed=11, n_fact=120, n_dim=12)
+    if fixture == "chain":
+        return chain_schema(seed=12, n_rows=60, n_tables=3, fanout=2)
+    return snowflake_schema(seed=13, n_fact=80, n_dim=8, n_sub=4)
+
+
+# ------------------------------------------------------------- SumProd refactor
+
+def test_messages_refactor_matches_inline_pass(star):
+    """The exposed message pass must reproduce the consumed-inline result
+    (grouped and reduced) for a non-trivial semiring."""
+    sch, J, X, y = star
+    sp = SumProd(sch)
+    sem = Channels(3)
+    rng = np.random.default_rng(0)
+    factors = {
+        t.name: jnp.asarray(rng.random((t.n_rows, 3)).astype(np.float32))
+        for t in sch.tables
+    }
+    out = sp(sem, factors, group_by="fact")
+    jt = sch.join_tree("fact")
+    msgs = sp.messages(sem, factors, jt=jt)
+    out2 = sp.node_factor(sem, factors, jt, jt.root, msgs)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_refresh_messages_matches_full_pass(star):
+    """Dirtying one table and refreshing must equal a full re-pass, while
+    re-emitting only that table's root path."""
+    sch, J, X, y = star
+    c = QueryCounter()
+    sp = SumProd(sch, counter=c)
+    sem = Arithmetic()
+    rng = np.random.default_rng(1)
+    factors = {t.name: jnp.asarray(rng.random((t.n_rows,)).astype(np.float32))
+               for t in sch.tables}
+    jt = sch.join_tree("fact")
+    msgs = sp.messages(sem, factors, jt=jt)
+    full_edges = c.edges
+
+    factors["dim0"] = factors["dim0"] * 2.0
+    e0 = c.edges
+    msgs2 = sp.refresh_messages(sem, factors, msgs, {sch.index["dim0"]}, jt)
+    assert c.edges - e0 == 1 < full_edges       # star: 1 edge of D
+    fresh = sp.messages(sem, factors, jt=jt)
+    for a, b in zip(msgs2, fresh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- dynamic tables
+
+def test_dynamic_table_mechanics():
+    from repro.core import Table
+
+    t = Table(name="t", columns={"k": np.arange(4, dtype=np.int64),
+                                 "x": np.ones(4, np.float32)},
+              feature_columns=("x",))
+    dt = DynamicTable(t, slack=0.5)
+    assert dt.capacity == 6 and dt.n_live == 4
+    dt.apply(TableDelta("t", deletes=np.asarray([1])))
+    assert dt.n_live == 3 and not dt.live[1]
+    with pytest.raises(IndexError):             # double delete
+        dt.apply(TableDelta("t", deletes=np.asarray([1])))
+    with pytest.raises(IndexError):             # update of dead slot
+        dt.apply(TableDelta("t", updates=(np.asarray([1]), {"x": np.zeros(1)})))
+    # insert reuses the freed slot first
+    changed, grew = dt.apply(TableDelta("t", inserts={
+        "k": np.asarray([9]), "x": np.asarray([5.0], np.float32)}))
+    assert not grew and changed.tolist() == [1] and dt.columns["x"][1] == 5.0
+    # capacity growth on overflow
+    changed, grew = dt.apply(TableDelta("t", inserts={
+        "k": np.arange(4, dtype=np.int64), "x": np.zeros(4, np.float32)}))
+    assert grew and dt.capacity > 6 and dt.n_live == 8
+    with pytest.raises(KeyError):               # insert missing a column
+        dt.apply(TableDelta("t", inserts={"x": np.zeros(1, np.float32)}))
+    eff = dt.effective()
+    assert eff.n_rows == 8 and eff.feature_columns == ("x",)
+
+
+def test_maintained_rejects_key_column_update(star):
+    sch, _, _, _ = star
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)))
+    with pytest.raises(ValueError):
+        ms.apply([TableDelta("fact",
+                             updates=(np.asarray([0]), {"k0": np.asarray([3])}))])
+
+
+# --------------------------------------------------- maintained correctness --
+
+def _assert_matches_oracle(ms, group):
+    """Maintained grouped scores == fresh full recompute on live tables,
+    exactly (f32 path), plus a materialized-join cross-check."""
+    tot_o, cnt_o = ms.recompute_oracle(group)
+    tot_m, cnt_m = ms.grouped_cached(group)
+    live = ms.live_rows(group)
+    # capacity-shaped, bit-for-bit: live slots match the fresh recompute,
+    # dead slots read (0, 0) on both sides
+    np.testing.assert_array_equal(np.asarray(cnt_m), np.asarray(cnt_o))
+    np.testing.assert_array_equal(np.asarray(tot_m), np.asarray(tot_o))
+    # independent ground truth: brute-force over the materialized join
+    eff = ms.effective_schema()
+    J = materialize_join(eff)
+    X = jnp.stack([J[c] for (_, c) in eff.features], axis=1)
+    rows = np.asarray(J["__rows__" + group])
+    preds = np.asarray(predict_rows(ms.trees, X))
+    n = eff.table(group).n_rows
+    np.testing.assert_allclose(np.asarray(tot_o)[live],
+                               np.bincount(rows, weights=preds, minlength=n),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cnt_o)[live],
+                               np.bincount(rows, minlength=n), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", ["star", "chain", "snowflake"])
+def test_random_delta_stream_matches_recompute_oracle(shape):
+    sch = _small(shape)
+    trees = _fit(sch)
+    c = QueryCounter()
+    ms = MaintainedScorer(compile_ensemble(sch, trees), counter=c)
+    group = sch.label_table
+    ms.grouped_cached(group)                      # prime the message cache
+    full_edges = len(sch.join_tree(group).edges)
+    inc_edges = []
+    for batch in delta_stream(sch, ms.live_rows, seed=17, n_batches=5,
+                              ops_per_batch=6):
+        e0 = c.edges
+        v0 = ms.data_version
+        assert ms.apply(batch) == v0 + 1
+        _assert_matches_oracle(ms, group)
+        inc_edges.append(c.edges - e0)
+    # a refresh never exceeds one emission per edge (full-pass cost is
+    # the worst case even when a batch touches every table)
+    assert len(inc_edges) == 5
+    assert all(e <= full_edges for e in inc_edges)
+
+
+def test_single_table_delta_is_path_local(snowflake):
+    """Sub-dimension delta re-emits exactly its 2-edge root path of the
+    2·D-edge snowflake tree, and stays oracle-exact."""
+    sch, J, X, y = snowflake
+    c = QueryCounter()
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)), counter=c)
+    ms.grouped_cached("fact")
+    full_edges = len(sch.join_tree("fact").edges)
+    assert full_edges == 4                        # 2 dims × 2 hops
+    rng = np.random.default_rng(3)
+    slots = ms.live_rows("sub0")[:2]
+    e0 = c.edges
+    ms.apply([TableDelta("sub0", updates=(slots, {
+        "s0f0": rng.standard_normal(2).astype(np.float32)}))])
+    ms.grouped_cached("fact")
+    assert c.edges - e0 == 2                      # sub0 → dim0 → fact only
+    _assert_matches_oracle(ms, "fact")
+
+
+def test_maintained_grouping_by_every_table(star):
+    """Maintenance must stay correct for any grouping root, not just the
+    label table (each root has its own message cache + dirty set)."""
+    sch, J, X, y = star
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)))
+    for t in sch.tables:
+        ms.grouped_cached(t.name)
+    rng = np.random.default_rng(5)
+    for batch in delta_stream(sch, ms.live_rows, seed=23, n_batches=3,
+                              ops_per_batch=5):
+        ms.apply(batch)
+        for t in sch.tables:
+            _assert_matches_oracle(ms, t.name)
+
+
+def test_insert_with_new_join_key_then_match(star):
+    """A row with a previously unseen key joins nothing until the other
+    side inserts the matching key — append-only key dictionaries."""
+    sch, J, X, y = star
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)))
+    group = "fact"
+    ms.grouped_cached(group)
+    fact = sch.table("fact")
+    new_key = int(max(np.asarray(sch.table("dim0").col("k0")).max(),
+                      np.asarray(fact.col("k0")).max())) + 5
+    row = {c: (np.asarray([new_key], fact.col(c).dtype) if c == "k0"
+               else np.zeros(1, fact.col(c).dtype))
+           for c in fact.columns}
+    changed_before = ms.tables["fact"].n_live
+    ms.apply([TableDelta("fact", inserts=row)])
+    slot = int(np.setdiff1d(ms.live_rows("fact"),
+                            np.arange(changed_before))[0])
+    tot, cnt = ms.grouped_cached(group)
+    assert float(cnt[slot]) == 0.0               # dangling key: not in join
+    _assert_matches_oracle(ms, group)
+    # now insert the matching dimension row on the other side
+    dim = sch.table("dim0")
+    drow = {c: (np.asarray([new_key], dim.col(c).dtype) if c == "k0"
+                else np.zeros(1, dim.col(c).dtype)) for c in dim.columns}
+    ms.apply([TableDelta("dim0", inserts=drow)])
+    tot, cnt = ms.grouped_cached(group)
+    assert float(cnt[slot]) > 0.0                # the join now matches
+    _assert_matches_oracle(ms, group)
+
+
+def test_capacity_growth_preserves_scores(star):
+    """Inserting past capacity grows the padded store; scores stay exact
+    and pre-existing slots keep their ids."""
+    sch, J, X, y = star
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)), slack=0.05)
+    group = "fact"
+    live0 = ms.live_rows(group)
+    tot0, cnt0 = map(np.asarray, ms.grouped_cached(group))
+    fact = sch.table("fact")
+    k = ms.tables["fact"].capacity - ms.tables["fact"].n_live + 3
+    rng = np.random.default_rng(9)
+    ins = {}
+    for c in fact.columns:
+        v = fact.col(c)
+        ins[c] = (rng.integers(0, 12, k).astype(v.dtype) if c.startswith("k")
+                  else rng.standard_normal(k).astype(v.dtype))
+    cap0 = ms.tables["fact"].capacity
+    ms.apply([TableDelta("fact", inserts=ins)])
+    assert ms.tables["fact"].capacity > cap0
+    tot1, cnt1 = map(np.asarray, ms.grouped_cached(group))
+    # pre-existing rows keep their slots AND their scores
+    np.testing.assert_array_equal(tot1[live0], tot0[live0])
+    np.testing.assert_array_equal(cnt1[live0], cnt0[live0])
+    _assert_matches_oracle(ms, group)
+
+
+# ----------------------------------------------------------------- service --
+
+def test_service_never_serves_stale_scores_across_deltas(star):
+    """Satellite regression: the LRU result cache is namespaced by
+    (registry version, data_version) — a delta update AND a hot swap must
+    both invalidate prior cached entries."""
+    sch, J, X, y = star
+    trees = _fit(sch)
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    reg = ModelRegistry()
+    reg.publish(ms)
+    svc = RelationalScoringService(reg, "fact", max_batch=16,
+                                   max_wait_ms=2.0, cache_size=256)
+    rid = 3
+
+    async def run():
+        await svc.start()
+        before = await svc.score(rid)
+        again = await svc.score(rid)              # cache hit
+        assert again == before and svc.stats.cache_hits >= 1
+
+        # delta 1: rewrite the dim0 features this fact row joins — the
+        # re-queried score must equal the CURRENT maintained value, not
+        # whatever the cache stored pre-delta
+        dk = int(ms.tables["fact"].columns["k0"][rid])
+        cols = {c: np.asarray([7.5], np.float32)
+                for c in sch.table("dim0").feature_columns}
+        ms.apply([TableDelta("dim0",
+                             updates=(np.asarray([dk]), cols))])
+        after = await svc.score(rid)
+        tot, cnt = ms.grouped_cached("fact")
+        want = float(tot[rid]) / max(float(cnt[rid]), 1.0)
+        np.testing.assert_allclose(after, want, rtol=1e-6)
+
+        # delta 2: delete the joined dim row — the fact row leaves the
+        # join entirely, so its mean is exactly 0.0 (guaranteed change)
+        assert before != 0.0
+        ms.apply([TableDelta("dim0", deletes=np.asarray([dk]))])
+        after_del = await svc.score(rid)
+        assert after_del == 0.0
+
+        # hot swap invalidates too (pre-existing behaviour, re-pinned)
+        reg.publish(compile_ensemble(sch, trees[:1]))
+        swapped = await svc.score(rid)
+        e1 = compile_ensemble(sch, trees[:1])
+        t1, c1 = e1.score_grouped("fact")
+        np.testing.assert_allclose(
+            swapped, float(t1[rid]) / max(float(c1[rid]), 1.0), rtol=1e-6)
+        await svc.stop()
+
+    asyncio.run(run())
+
+
+# ------------------------------------------------------------- multi-model --
+
+def test_stacked_multi_model_single_pass(star, request):
+    sch, J, X, y = star
+    trees = request.getfixturevalue("star_trees")
+    e1 = compile_ensemble(sch, trees[:1])
+    e2 = compile_ensemble(sch, trees)
+    c = QueryCounter()
+    stacked = stack_ensembles([e1, e2], counter=c)
+    outs = stacked.score_grouped("fact")
+    assert c.count == 1 and len(outs) == 2
+    for ens, (tot, cnt) in zip([e1, e2], outs):
+        tot_w, cnt_w = score_grouped(ens, "fact")
+        np.testing.assert_allclose(np.asarray(tot), np.asarray(tot_w),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_w))
+
+
+def test_registry_stacked_cache_tracks_versions(star, request):
+    sch, J, X, y = star
+    trees = request.getfixturevalue("star_trees")
+    reg = ModelRegistry()
+    reg.publish(compile_ensemble(sch, trees[:1]))
+    reg.publish(compile_ensemble(sch, trees[:2]))
+    s1 = reg.stacked()
+    assert s1 is reg.stacked()                    # cached
+    reg.publish(compile_ensemble(sch, trees))
+    s2 = reg.stacked()
+    assert s2 is not s1 and s2.n_models == 3
+    # a published MaintainedScorer can't ride the static join tree its
+    # capacity-padded factors don't fit — stacking must reject it loudly
+    # rather than crash (or serve garbage) at score time
+    ms = MaintainedScorer(compile_ensemble(sch, trees[:1]))
+    reg2 = ModelRegistry()
+    reg2.publish(ms)
+    with pytest.raises(ValueError, match="maintained"):
+        reg2.stacked()
+    # ...but a static snapshot of its live state stacks fine
+    snap = compile_ensemble(ms.effective_schema(), ms.trees)
+    outs = stack_ensembles([snap, snap]).score_grouped("fact")
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+
+
+# ------------------------------------------------------------------- bf16 --
+
+def test_bf16_factor_mode_close_to_f32_oracle(star, request):
+    sch, J, X, y = star
+    trees = request.getfixturevalue("star_trees")
+    f32 = compile_ensemble(sch, trees)
+    bf16 = compile_ensemble(sch, trees, factor_dtype=jnp.bfloat16)
+    assert bf16.factors["fact"].dtype == jnp.bfloat16
+    tot, cnt = score_grouped(f32, "fact")
+    tot_b, cnt_b = score_grouped(bf16, "fact")
+    assert tot_b.dtype == jnp.float32             # served outputs stay f32
+    # masks are 0/1 and group sizes ≪ 2^8, so bf16 counts stay near-exact
+    np.testing.assert_allclose(np.asarray(cnt_b), np.asarray(cnt),
+                               rtol=1e-2, atol=0.5)
+    np.testing.assert_allclose(np.asarray(tot_b), np.asarray(tot),
+                               rtol=2e-2, atol=2e-2)
