@@ -9,10 +9,11 @@ Public API:
     MaterializedBooster              — the paper's baseline (baseline.py)
     TreeArrays, predict_rows         — trees (tree.py)
 """
+from .engine import DirectEngine, QueryEngine
 from .schema import NotAcyclicError, Schema, Table
 from .semiring import Arithmetic, BooleanSR, Channels, PolyCoeff, PolyFreq, Tropical
 from .sketch import Hash2, TableHashes, count_sketch_dense, sketch_factors, tensor_sketch_dense
-from .sumprod import QueryCounter, SumProd, materialize_join
+from .sumprod import MessageCache, QueryCounter, SumProd, materialize_join, refresh_plan
 from .trainer import BoostConfig, Booster, FitTrace
 from .baseline import MaterializedBooster
 from .tree import TreeArrays, leaf_masks, predict_rows
@@ -21,7 +22,8 @@ __all__ = [
     "NotAcyclicError", "Schema", "Table",
     "Arithmetic", "BooleanSR", "Channels", "PolyCoeff", "PolyFreq", "Tropical",
     "Hash2", "TableHashes", "count_sketch_dense", "sketch_factors", "tensor_sketch_dense",
-    "QueryCounter", "SumProd", "materialize_join",
+    "MessageCache", "QueryCounter", "SumProd", "materialize_join", "refresh_plan",
+    "DirectEngine", "QueryEngine",
     "BoostConfig", "Booster", "FitTrace", "MaterializedBooster",
     "TreeArrays", "leaf_masks", "predict_rows",
 ]

@@ -1,0 +1,170 @@
+"""Injectable grouped-query engines for the boosting trainer.
+
+The trainer's node-statistics queries — the fused (n, Σy, Σy²) channels
+query, the exact leaf-pair count queries, and the polynomial-semiring
+sketch queries — are routed through a :class:`QueryEngine`, so the SAME
+Algorithm 1–3 control flow (level-BFS tree growth, residual statistics,
+split ranking) can run against different evaluation strategies:
+
+- :class:`DirectEngine` (here): one full inside-out SumProd pass per
+  query family, vmapped over the level's tree nodes — the paper's
+  execution model.  Jittable: the whole level step compiles to one XLA
+  program, and query/edge costs are accounted analytically.
+- ``MaintainedEngine`` (incremental/retrain.py): answers the same
+  queries from signature-keyed per-edge message caches kept fresh under
+  :class:`~repro.incremental.TableDelta` streams — messages from
+  unchanged subtrees are reused across tree levels, across trees, and
+  across deltas (the Relational Data Borg direction: maintained
+  aggregates feed retraining, not just serving).  Host-orchestrated
+  (signatures hash concrete mask bytes), hence not jittable; every
+  segment-⊕ emission is counted for real.
+
+Engines also own the trainer's *data surface* (row-domain sizes, the
+feature matrices masks and split plans are built from), because the
+maintained path works on capacity-padded dynamic stores whose row space
+is wider than the static schema's.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .semiring import Arithmetic
+from .sketch import sketch_factors
+
+
+class QueryEngine:
+    """Strategy interface for the Booster's grouped SumProd queries.
+
+    ``bind(booster)`` is called once from ``Booster.__init__`` with the
+    fully-constructed trainer (schema, semirings, sketch hashes); the
+    engine builds its per-table base factors there.
+
+    ``jittable``: grouped queries are pure jax and safe to trace (the
+    trainer then jits level steps and uses ``lax.fori_loop``); host-side
+    caching engines set False and the trainer runs eagerly with Python
+    loops.  ``analytic_edges``: the trainer bumps ``QueryCounter.edges``
+    analytically (one emission per join-tree edge per query family — jit
+    caching would otherwise undercount); engines that count real
+    emissions themselves set False.
+    """
+
+    jittable: bool = True
+    analytic_edges: bool = True
+
+    def bind(self, booster) -> None:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- queries --
+    def grouped_c3(self, table: str, masks, extra=None):
+        """(K, rows(table), 3): (count, Σy, Σy²) grouped by ``table``,
+        batched over the K node-mask rows; ``extra`` conjoins optional
+        per-table masks (a previous tree's leaf)."""
+        raise NotImplementedError
+
+    def grouped_count_pair(self, table: str, masks, extra_a, extra_b):
+        """(K, rows(table)): |J^{(a)} ∩ J^{(b)} ∩ J^{(v)} ∩ ρ⋈·| counts."""
+        raise NotImplementedError
+
+    def grouped_sketch(self, table: str, masks, extra=None, labeled=False):
+        """(K, rows(table), k_c): polynomial-semiring sketch grouped by
+        ``table``; ``labeled`` weights the label table's factor by y."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------- data surface --
+    def n_rows(self, table: str) -> int:
+        """Row-id domain of ``table`` (schema rows, or store capacity)."""
+        raise NotImplementedError
+
+    def mask_featmat(self, table: str) -> Optional[jnp.ndarray]:
+        """Feature matrix for mask descent; None → the schema's static
+        device-resident matrix."""
+        raise NotImplementedError
+
+    def plan_featmats(self) -> Optional[Dict[str, jnp.ndarray]]:
+        """Per-table feature matrices for split plans (dead rows pushed
+        to +inf so they never become thresholds); None → schema static."""
+        raise NotImplementedError
+
+
+class DirectEngine(QueryEngine):
+    """The paper's execution model: a full vmapped SumProd pass per query
+    family over the static schema (previously inlined in ``Booster``)."""
+
+    jittable = True
+    analytic_edges = True
+
+    def bind(self, booster) -> None:
+        schema = booster.schema
+        self.schema = schema
+        self.sp = booster.sp
+        self.c3 = booster.c3
+        self.sem = booster.sem
+        lbl = schema.labels
+        self._c3_base = {}
+        for t in schema.tables:
+            if t.name == schema.label_table:
+                self._c3_base[t.name] = jnp.stack(
+                    [jnp.ones_like(lbl), lbl, jnp.square(lbl)], axis=-1
+                )
+            else:
+                self._c3_base[t.name] = self.c3.ones((t.n_rows,))
+        # unweighted monomial factors (weights applied per query by linearity)
+        self._sk_base = sketch_factors(
+            schema, self.sem, booster.hashes, schema.label_table,
+            jnp.ones_like(lbl),
+        )
+        self._sk_label = dict(self._sk_base)
+        self._sk_label[schema.label_table] = self.sem.scale(
+            self._sk_base[schema.label_table], lbl
+        )
+
+    # ------------------------------------------------------------- queries --
+    def grouped_c3(self, table, masks, extra=None):
+        def one(mrow):
+            f = {}
+            for tn in mrow:
+                keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
+                f[tn] = self.c3.mask(self._c3_base[tn], keep)
+            return self.sp(self.c3, f, group_by=table)
+
+        return jax.vmap(one)(masks)
+
+    def grouped_count_pair(self, table, masks, extra_a, extra_b):
+        ar = Arithmetic()
+
+        def one(mrow):
+            f = {
+                tn: ar.mask(
+                    jnp.ones((self.schema.table(tn).n_rows,), jnp.float32),
+                    mrow[tn] & extra_a[tn] & extra_b[tn],
+                )
+                for tn in mrow
+            }
+            return self.sp(ar, f, group_by=table)
+
+        return jax.vmap(one)(masks)
+
+    def grouped_sketch(self, table, masks, extra=None, labeled=False):
+        base = self._sk_label if labeled else self._sk_base
+
+        def one(mrow):
+            f = {}
+            for tn in mrow:
+                keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
+                f[tn] = self.sem.mask(base[tn], keep)
+            return self.sp(self.sem, f, group_by=table)
+
+        return jax.vmap(one)(masks)
+
+    # -------------------------------------------------------- data surface --
+    def n_rows(self, table):
+        return self.schema.table(table).n_rows
+
+    def mask_featmat(self, table):
+        return None
+
+    def plan_featmats(self):
+        return None

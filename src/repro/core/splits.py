@@ -28,6 +28,25 @@ from .schema import Schema
 NEG = -jnp.inf
 
 
+def _argmax_band(scores: jnp.ndarray, axis: int,
+                 rtol: float = 1e-5, atol: float = 1e-8) -> jnp.ndarray:
+    """argmax that treats scores within an ulp-noise band of the max as
+    TIED and picks the lowest index.  Mathematically tied candidates
+    (e.g. two joined features inducing the same partition) acquire
+    ulp-level score differences whose sign depends on the evaluation
+    route (jitted vs eager, capacity-padded vs dense rows, message
+    caching); a plain argmax then picks route-dependent splits.  The
+    banded rule is deterministic across routes — the maintained and
+    direct query engines provably select identical trees.  Applied at
+    feature- and table-selection granularity (where cross-table joins
+    genuinely duplicate partitions); the boundary sweep keeps a plain
+    argmax — near-tied boundaries are distinct real candidates, and the
+    materialized-join baseline must remain split-for-split comparable."""
+    m = jnp.max(scores, axis=axis, keepdims=True)
+    band = jnp.abs(m) * rtol + atol
+    return jnp.argmax(scores >= m - band, axis=axis)
+
+
 @dataclasses.dataclass(frozen=True)
 class TableSplitPlan:
     """Static per-table artifacts for the sweep."""
@@ -38,10 +57,20 @@ class TableSplitPlan:
     global_ids: jnp.ndarray   # (d_t,) global feature ids
 
 
-def build_split_plans(schema: Schema) -> Dict[str, TableSplitPlan]:
+def build_split_plans(
+    schema: Schema,
+    featmats: Optional[Dict[str, np.ndarray]] = None,
+) -> Dict[str, TableSplitPlan]:
+    """Static per-table sweep artifacts.  ``featmats`` overrides the
+    schema's device-resident matrices (same columns, arbitrary row
+    domain) — maintained engines pass capacity-shaped matrices whose
+    dead slots sit at +inf, so they sort last and can never become
+    thresholds (their stats are ⊕-zero either way)."""
     plans = {}
     for t in schema.tables:
-        fm = np.asarray(schema.featmat[t.name])      # (n, d_t)
+        src = (featmats[t.name] if featmats is not None and t.name in featmats
+               else schema.featmat[t.name])
+        fm = np.asarray(src)                         # (n, d_t)
         if fm.shape[1] == 0:
             continue
         order = np.argsort(fm, axis=0, kind="stable").T.astype(np.int32)
@@ -113,7 +142,7 @@ def best_split_for_table(
     d_t = plan.order.shape[0]
     res = jax.lax.map(one_feature, jnp.arange(d_t))
     scores = res[0]                                  # (d_t, K)
-    fbest = jnp.argmax(scores, axis=0)               # (K,)
+    fbest = _argmax_band(scores, axis=0)             # (K,) ties → lower gid
     pick = lambda a: jnp.take_along_axis(a, fbest[None, :], axis=0)[0]
     # subtract the no-split score so `score` is a true gain (≥ 0 when useful)
     base = jnp.square(tot_s) / jnp.maximum(tot_n, 1e-9)
@@ -129,10 +158,9 @@ def best_split_for_table(
 
 
 def merge_table_results(results) -> SplitResult:
-    """argmax across tables (ties → lower global feature id, deterministic)."""
+    """argmax across tables (ties — including ulp-level float ties — go
+    to the earlier table, i.e. the lower global feature id)."""
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
-    # primary: score; tie-break: -feature id (prefer smaller gid)
-    key = stacked.score - 1e-9 * stacked.feature.astype(jnp.float32)
-    best = jnp.argmax(key, axis=0)                   # (K,)
+    best = _argmax_band(stacked.score, axis=0)       # (K,)
     take = lambda a: jnp.take_along_axis(a, best[None, :], axis=0)[0]
     return jax.tree.map(take, stacked)

@@ -23,7 +23,8 @@ per-shard and key-domain message vectors are ⊕-combined with ``psum``
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Set
+from collections import OrderedDict
+from typing import Dict, Hashable, Iterable, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,69 @@ class QueryCounter:
         self.edges += int(n)
 
 
+def refresh_plan(jt: JoinTree, dirty: Iterable[int]) -> List[bool]:
+    """Static plan of a path-restricted refresh: which edges (leaf-first
+    order, aligned with ``jt.edges``) must re-emit their segment-⊕ when
+    the tables in ``dirty`` changed.  Dirtiness propagates child→parent,
+    so the plan covers the union of the dirty tables' root paths.  Shared
+    by the eager :meth:`SumProd.refresh_messages` and the jitted refresh
+    cached per (root, dirty-set, shapes) in incremental/maintain.py —
+    both must re-emit exactly these edges so ``QueryCounter.edges``
+    accounting is route-independent."""
+    live: Set[int] = set(dirty)
+    plan: List[bool] = []
+    for e in jt.edges:
+        hit = e.child in live
+        plan.append(hit)
+        if hit:
+            live.add(e.parent)
+    return plan
+
+
+class MessageCache:
+    """Signature-keyed memo of per-edge segment-⊕ messages.
+
+    Key: (join-tree root, edge index, subtree signature).  The subtree
+    signature combines, bottom-up, the factor signatures of every table
+    in the edge's child subtree — two queries whose factors agree on that
+    whole subtree share the message, so boosting's per-node/per-leaf
+    query families reuse unchanged-subtree messages across tree levels,
+    across trees, and across deltas.  Entries are LRU-bounded per edge;
+    a cached message whose key domain grew since emission is ⊕-identity
+    padded on retrieval (a new key has no child rows yet).
+    """
+
+    def __init__(self, max_per_edge: int = 64):
+        self.max_per_edge = max_per_edge
+        self._store: Dict[tuple, "OrderedDict[Hashable, jnp.ndarray]"] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, root: int, edge: int, sig: Hashable):
+        slot = self._store.get((root, edge))
+        if slot is None or sig not in slot:
+            self.misses += 1
+            return None
+        slot.move_to_end(sig)
+        self.hits += 1
+        return slot[sig]
+
+    def put(self, root: int, edge: int, sig: Hashable, msg: jnp.ndarray):
+        slot = self._store.setdefault((root, edge), OrderedDict())
+        slot[sig] = msg
+        slot.move_to_end(sig)
+        while len(slot) > self.max_per_edge:
+            slot.popitem(last=False)
+
+    def clear(self):
+        self._store.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
 class SumProd:
     """Executable SumProd program for one schema."""
 
@@ -77,12 +141,25 @@ class SumProd:
         msgs: List[Optional[jnp.ndarray]],
     ) -> jnp.ndarray:
         """Combined factor at ``node``: base factor ⊗ gathered messages
-        from every child edge whose message is already available."""
+        from every child edge whose message is already available.  The
+        gather axis is derived from each message's rank, so factors and
+        messages may carry leading batch dims (broadcast under ⊗)."""
         f = factors[self.schema.names[node]]
         for i, e in enumerate(jt.edges):
             if e.parent == node and msgs[i] is not None:
-                f = sem.mul(f, jnp.take(msgs[i], e.parent_ids, axis=0))
+                m = msgs[i]
+                ax = m.ndim - 1 - len(sem.value_shape)
+                f = sem.mul(f, jnp.take(m, e.parent_ids, axis=ax))
         return f
+
+    @staticmethod
+    def _segment_add_any(sem: Semiring, vals, segment_ids, num_segments):
+        """segment-⊕ with an optional leading batch dim (vmapped)."""
+        if vals.ndim == 1 + len(sem.value_shape):
+            return sem.segment_add(vals, segment_ids, num_segments)
+        return jax.vmap(
+            lambda v: sem.segment_add(v, segment_ids, num_segments)
+        )(vals)
 
     def messages(
         self,
@@ -120,21 +197,65 @@ class SumProd:
         Cost: one segment-⊕ per edge on the union of the dirty tables'
         root paths — O(path) instead of O(τ−1).
         """
-        live: Set[int] = set(dirty)
+        plan = refresh_plan(jt, dirty)
         new = list(msgs)
-        recomputed = 0
         for i, e in enumerate(jt.edges):
             if new[i].shape[0] < e.n_keys:
                 pad = sem.zeros((e.n_keys - new[i].shape[0],))
                 new[i] = jnp.concatenate([new[i], pad], axis=0)
-            if e.child in live:
+            if plan[i]:
                 cf = self.node_factor(sem, factors, jt, e.child, new)
                 new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
-                live.add(e.parent)
-                recomputed += 1
+        if self.counter is not None:
+            self.counter.bump_edges(sum(plan))
+        return new
+
+    def messages_memo(
+        self,
+        sem: Semiring,
+        factors: Dict[str, jnp.ndarray],
+        jt: JoinTree,
+        sigs: Dict[str, Hashable],
+        cache: MessageCache,
+    ) -> List[jnp.ndarray]:
+        """Inside-out message pass through a signature-keyed cache.
+
+        ``factors``: per-table arrays with ONE leading batch dim
+        ((B_t, n_rows, *value_shape), B_t ∈ {1, K}) — a query family may
+        batch node-uniform tables as a single row and broadcast.
+        ``sigs``: per-table hashable factor signatures (content version +
+        mask digest + batch width).  An edge whose whole child subtree
+        matches a cached signature reuses the cached message and emits
+        nothing; only misses run a segment-⊕ (and bump
+        ``QueryCounter.edges``) — the maintained-retraining win the
+        benchmarks audit.
+        """
+        names = self.schema.names
+        msgs: List[Optional[jnp.ndarray]] = [None] * len(jt.edges)
+        subsig: List[Hashable] = [None] * len(jt.edges)
+        recomputed = 0
+        for i, e in enumerate(jt.edges):
+            incoming = [j for j in range(i) if jt.edges[j].parent == e.child]
+            sig = (sigs[names[e.child]], tuple(subsig[j] for j in incoming))
+            subsig[i] = sig
+            hit = cache.get(jt.root, i, sig)
+            if hit is not None:
+                ax = hit.ndim - 1 - len(sem.value_shape)
+                if hit.shape[ax] < e.n_keys:      # key domain grew: ⊕-pad
+                    pad_batch = hit.shape[:ax] + (e.n_keys - hit.shape[ax],)
+                    hit = jnp.concatenate(
+                        [hit, sem.zeros(pad_batch)], axis=ax
+                    )
+                    cache.put(jt.root, i, sig, hit)
+                msgs[i] = hit
+                continue
+            cf = self.node_factor(sem, factors, jt, e.child, msgs)
+            msgs[i] = self._segment_add_any(sem, cf, e.child_ids, e.n_keys)
+            cache.put(jt.root, i, sig, msgs[i])
+            recomputed += 1
         if self.counter is not None:
             self.counter.bump_edges(recomputed)
-        return new
+        return msgs  # type: ignore[return-value]
 
     def __call__(
         self,

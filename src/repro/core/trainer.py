@@ -29,6 +29,13 @@ Performance: each tree level is one jitted program (masks in, split
 decision out); shapes are keyed by (level, #prev-leaves) so compiled
 steps are reused across trees and runs.  SumProd query counts are
 accounted *analytically* (the jit caches would otherwise undercount).
+
+Query execution is delegated to an injectable :class:`QueryEngine`
+(engine.py): the default :class:`DirectEngine` runs one vmapped SumProd
+pass per query family (the paper's model, jitted); the maintained
+engine (incremental/retrain.py) answers the same queries from cached
+per-edge messages kept fresh under table deltas, running the level loop
+eagerly so message signatures can hash concrete masks.
 """
 from __future__ import annotations
 
@@ -39,9 +46,10 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .engine import DirectEngine, QueryEngine
 from .schema import Schema
-from .semiring import Arithmetic, Channels, PolyCoeff, PolyFreq
-from .sketch import TableHashes, sketch_factors
+from .semiring import Channels, PolyCoeff, PolyFreq
+from .sketch import TableHashes
 from .splits import SplitResult, best_split_for_table, build_split_plans, merge_table_results
 from .sumprod import QueryCounter, SumProd
 from .tree import TreeArrays, descend_masks_level, leaf_masks, root_masks
@@ -72,78 +80,58 @@ class FitTrace:
 class Booster:
     """Trains boosted regression trees directly on a relational schema."""
 
-    def __init__(self, schema: Schema, cfg: BoostConfig, key: Optional[jax.Array] = None):
+    def __init__(self, schema: Schema, cfg: BoostConfig,
+                 key: Optional[jax.Array] = None,
+                 engine: Optional[QueryEngine] = None):
         self.schema = schema
         self.cfg = cfg
         self.counter = QueryCounter()
         self.sp = SumProd(schema)            # counting done analytically below
-        self.plans = build_split_plans(schema)
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
         self.hashes = TableHashes.make(key, schema, cfg.sketch_k)
         self.sem = (
             PolyFreq(cfg.sketch_k) if cfg.sketch_domain == "freq" else PolyCoeff(cfg.sketch_k)
         )
         self.c3 = Channels(3)
-        lbl = schema.labels
-        self._c3_base = {}
-        for t in schema.tables:
-            if t.name == schema.label_table:
-                self._c3_base[t.name] = jnp.stack(
-                    [jnp.ones_like(lbl), lbl, jnp.square(lbl)], axis=-1
-                )
-            else:
-                self._c3_base[t.name] = self.c3.ones((t.n_rows,))
-        # unweighted monomial factors (weights applied per query by linearity)
-        self._sk_base = sketch_factors(
-            schema, self.sem, self.hashes, schema.label_table, jnp.ones_like(lbl)
-        )
-        self._sk_label = dict(self._sk_base)
-        self._sk_label[schema.label_table] = self.sem.scale(
-            self._sk_base[schema.label_table], lbl
-        )
-        self._level_step = jax.jit(self._level_step_impl)
-        self._leaf_masks = jax.jit(self._leaf_masks_impl)
+        self.engine = engine if engine is not None else DirectEngine()
+        self.engine.bind(self)
+        self.plans = build_split_plans(schema, featmats=self.engine.plan_featmats())
+        if self.engine.jittable:
+            self._level_step = jax.jit(self._level_step_impl)
+            self._leaf_masks = jax.jit(self._leaf_masks_impl)
+        else:                                # host-side caching engines hash
+            self._level_step = self._level_step_impl   # concrete mask bytes
+            self._leaf_masks = self._leaf_masks_impl
+
+    def refresh_plans(self):
+        """Rebuild split plans from the engine's current feature matrices
+        (maintained engines call this after applying table deltas)."""
+        self.plans = build_split_plans(self.schema,
+                                       featmats=self.engine.plan_featmats())
 
     # ------------------------------------------------------------- queries --
     def _grouped_c3(self, table, masks, extra=None):
-        """(K, n_t, 3): (count, Σy, Σy²) grouped by `table`, vmapped over nodes.
-        `extra`: optional conjunctive per-table masks (prev-tree leaf)."""
-
-        def one(mrow):
-            f = {}
-            for tn in mrow:
-                keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
-                f[tn] = self.c3.mask(self._c3_base[tn], keep)
-            return self.sp(self.c3, f, group_by=table)
-
-        return jax.vmap(one)(masks)
+        """(K, n_t, 3): (count, Σy, Σy²) grouped by `table`, batched over
+        nodes.  `extra`: optional conjunctive per-table masks (prev-tree
+        leaf).  Delegates to the injected engine."""
+        return self.engine.grouped_c3(table, masks, extra)
 
     def _grouped_count_pair(self, table, masks, extra_a, extra_b):
-        ar = Arithmetic()
-
-        def one(mrow):
-            f = {
-                tn: ar.mask(
-                    jnp.ones((self.schema.table(tn).n_rows,), jnp.float32),
-                    mrow[tn] & extra_a[tn] & extra_b[tn],
-                )
-                for tn in mrow
-            }
-            return self.sp(ar, f, group_by=table)
-
-        return jax.vmap(one)(masks)
+        return self.engine.grouped_count_pair(table, masks, extra_a, extra_b)
 
     def _grouped_sketch(self, table, masks, extra=None, labeled=False):
-        base = self._sk_label if labeled else self._sk_base
+        return self.engine.grouped_sketch(table, masks, extra, labeled)
 
-        def one(mrow):
-            f = {}
-            for tn in mrow:
-                keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
-                f[tn] = self.sem.mask(base[tn], keep)
-            return self.sp(self.sem, f, group_by=table)
-
-        return jax.vmap(one)(masks)
+    def _loop(self, n, body, init):
+        """fori_loop under jit; a plain Python loop for eager engines
+        (lax.fori_loop would trace the body, defeating host-side mask
+        hashing and concrete indexing)."""
+        if self.engine.jittable:
+            return jax.lax.fori_loop(0, n, body, init)
+        acc = init
+        for i in range(n):
+            acc = body(i, acc)
+        return acc
 
     # ------------------------------------------------------ residual stats --
     def _table_stats(self, table, masks, prev_masks, prev_vals, want_ssr: bool):
@@ -161,7 +149,7 @@ class Booster:
             d = prev_vals[a]
             return (sum_r - d * st[..., 0], cross + d * st[..., 1])
 
-        sum_r, cross = jax.lax.fori_loop(0, M, leaf_body, (sy, jnp.zeros_like(sy)))
+        sum_r, cross = self._loop(M, leaf_body, (sy, jnp.zeros_like(sy)))
         if not want_ssr:
             return n, sum_r, None
 
@@ -174,7 +162,7 @@ class Booster:
                 cnt = self._grouped_count_pair(table, masks, ea, eb)
                 return acc + prev_vals[a] * prev_vals[b] * cnt
 
-            pair = jax.lax.fori_loop(0, M * M, pair_body, jnp.zeros_like(sy))
+            pair = self._loop(M * M, pair_body, jnp.zeros_like(sy))
             ssr_rho = uy - 2.0 * cross + pair
         elif self.cfg.mode == "sketch":
             resid = self._grouped_sketch(table, masks, labeled=True)  # (K,n_t,kc)
@@ -184,7 +172,7 @@ class Booster:
                 s = self._grouped_sketch(table, masks, extra=extra)
                 return acc - self.sem.scale(s, jnp.zeros(()) + prev_vals[a])
 
-            resid = jax.lax.fori_loop(0, M, sk_body, resid)
+            resid = self._loop(M, sk_body, resid)
             ssr_rho = self.sem.norm_sq(resid)
         else:
             raise ValueError(self.cfg.mode)
@@ -214,13 +202,18 @@ class Booster:
         rm = jnp.where(valid, best.right_sum / jnp.maximum(best.right_cnt, 1e-9), node_mean)
         new_mean = jnp.stack([lm, rm], axis=1).reshape(-1)
         new_masks = {
-            tn: descend_masks_level(self.schema, tn, feat, thr, masks[tn])
+            tn: descend_masks_level(self.schema, tn, feat, thr, masks[tn],
+                                    featmat=self.engine.mask_featmat(tn))
             for tn in masks
         }
         return feat, thr, new_mean, new_masks, ssr_out, node_n
 
     def _leaf_masks_impl(self, tree: TreeArrays):
-        return {t.name: leaf_masks(self.schema, t.name, tree) for t in self.schema.tables}
+        return {
+            t.name: leaf_masks(self.schema, t.name, tree,
+                               featmat=self.engine.mask_featmat(t.name))
+            for t in self.schema.tables
+        }
 
     # -------------------------------------------------- query accounting --
     def _count_level_queries(self, M: int) -> int:
@@ -234,6 +227,13 @@ class Booster:
                 per_table += 1 + M                         # Y' + per-leaf sketches
         return per_table * tau
 
+    def _count_level_edges(self, M: int) -> int:
+        """Analytic segment-⊕ emissions per level for the direct engine:
+        every query family re-emits each join-tree edge (τ_all − 1 for an
+        acyclic schema, any root) — the per-query baseline the maintained
+        engine's real emission counts are benchmarked against."""
+        return self._count_level_queries(M) * max(self.schema.n_tables - 1, 0)
+
     # -------------------------------------------------------------- fitting --
     def _fit_tree(self, prev_trees: List[TreeArrays], trace: FitTrace) -> TreeArrays:
         cfg, schema = self.cfg, self.schema
@@ -245,11 +245,17 @@ class Booster:
             }
             prev_vals = jnp.concatenate([pt.leaf for pt in prev_trees])
         else:
-            prev_masks = {t.name: jnp.zeros((0, t.n_rows), jnp.bool_) for t in schema.tables}
+            prev_masks = {
+                t.name: jnp.zeros((0, self.engine.n_rows(t.name)), jnp.bool_)
+                for t in schema.tables
+            }
             prev_vals = jnp.zeros((0,), jnp.float32)
 
         tree = TreeArrays.empty(cfg.depth)
-        masks = {t.name: root_masks(schema, t.name) for t in schema.tables}
+        masks = {
+            t.name: root_masks(schema, t.name, n_rows=self.engine.n_rows(t.name))
+            for t in schema.tables
+        }
         node_mean = jnp.zeros((1,), jnp.float32)
         M = int(prev_vals.shape[0])
 
@@ -264,19 +270,36 @@ class Booster:
                 leaf=tree.leaf,
             )
             self.counter.bump(self._count_level_queries(M))
+            if self.engine.analytic_edges:
+                self.counter.bump_edges(self._count_level_edges(M))
             if ssr:
                 trace.node_ssr.append(ssr)
                 trace.node_counts.append(node_n)
 
         return TreeArrays(feat=tree.feat, thr=tree.thr, leaf=cfg.lr * node_mean)
 
-    def fit(self) -> Tuple[List[TreeArrays], FitTrace]:
-        trace = FitTrace()
-        trees: List[TreeArrays] = []
-        for _ in range(self.cfg.n_trees):
+    def boost(
+        self,
+        trees: List[TreeArrays],
+        n_trees: int,
+        trace: Optional[FitTrace] = None,
+    ) -> Tuple[List[TreeArrays], FitTrace]:
+        """Warm start: append ``n_trees`` new trees fitted on the residuals
+        of ``trees`` (which are left untouched).  ``fit()`` is
+        ``boost([], cfg.n_trees)``; incremental retraining boosts on top
+        of a frozen prefix after applying table deltas.  The returned
+        trace reports THIS call's query cost (the lifetime total lives
+        on ``self.counter``)."""
+        trace = trace if trace is not None else FitTrace()
+        q0 = self.counter.count
+        trees = list(trees)
+        for _ in range(n_trees):
             trees.append(self._fit_tree(trees, trace))
-        trace.queries = self.counter.count
+        trace.queries = self.counter.count - q0
         return trees, trace
+
+    def fit(self) -> Tuple[List[TreeArrays], FitTrace]:
+        return self.boost([], self.cfg.n_trees)
 
     # ------------------------------------------------------------ serving --
     def predict_grouped(self, trees: List[TreeArrays], group_by: str):

@@ -1,11 +1,21 @@
-"""Incremental view maintenance for the relational serving subsystem.
+"""Incremental view maintenance for serving AND training.
 
     TableDelta                    — typed insert/delete/update batch
     DynamicTable / DynamicEdge    — capacity-padded mutable store + keys
+    DynamicState / TableChange    — shared mutable schema mirror
     MaintainedScorer              — delta-driven factors, path-restricted
-                                    message refresh, versioned memo
+                                    (jitted) message refresh, versioned memo
+    MaintainedEngine              — boosting queries from cached messages
+    IncrementalBooster            — delta-driven warm-start retraining
 """
 from .deltas import DynamicEdge, DynamicTable, TableDelta
+from .state import DynamicState, TableChange
 from .maintain import MaintainedScorer
+from .retrain import IncrementalBooster, MaintainedEngine, RefitReport
 
-__all__ = ["DynamicEdge", "DynamicTable", "TableDelta", "MaintainedScorer"]
+__all__ = [
+    "DynamicEdge", "DynamicTable", "TableDelta",
+    "DynamicState", "TableChange",
+    "MaintainedScorer",
+    "IncrementalBooster", "MaintainedEngine", "RefitReport",
+]

@@ -6,10 +6,23 @@ of Kara et al.): typed table deltas update (a) the per-table stacked
 leaf-mask factors — only the changed rows' mask slices are re-evaluated
 and scattered in — and (b) the memoized grouped counts/scores, by
 re-emitting segment-⊕ messages only along the changed tables' paths to
-the root and ⊗-combining them with the cached clean messages
-(:meth:`SumProd.refresh_messages`).  A full inside-out recompute costs
-one segment-⊕ per join-tree edge; a single-table delta costs one per
-edge on that table's root path — O(depth) instead of O(τ−1).
+the root and ⊗-combining them with the cached clean messages.  A full
+inside-out recompute costs one segment-⊕ per join-tree edge; a
+single-table delta costs one per edge on that table's root path —
+O(depth) instead of O(τ−1).
+
+The mutable substrate (capacity-padded stores, append-only key
+dictionaries, maintained join trees) lives in
+:class:`~repro.incremental.state.DynamicState`, shared with the
+incremental retraining engine (retrain.py); this module owns only the
+serving-specific state: stacked leaf-mask factors and message caches.
+
+The path-restricted refresh itself is JITTED: one compiled program per
+(root, dirty-set signature, shape fingerprint), re-emitting exactly the
+edges :func:`~repro.core.sumprod.refresh_plan` marks.  The emission
+count is bumped eagerly from the same plan, so ``QueryCounter.edges``
+accounting is identical to the eager :meth:`SumProd.refresh_messages`
+route — the IVM benchmarks' ratios are compile-cache independent.
 
 The scorer duck-types the slice of :class:`CompiledEnsemble` the serving
 layer uses (``factors`` / ``leaf_values`` / ``grouped_cached`` /
@@ -29,10 +42,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.schema import JoinTree, Schema, Table, TreeEdge
-from ..core.sumprod import QueryCounter, SumProd
+from ..core.schema import Schema
+from ..core.sumprod import QueryCounter, SumProd, refresh_plan
 from ..serving.compile import CompiledEnsemble, compile_ensemble, stack_table_factor
 from .deltas import DynamicEdge, DynamicTable, TableDelta
+from .state import DynamicState
 
 
 class MaintainedScorer:
@@ -53,15 +67,9 @@ class MaintainedScorer:
         self.factor_dtype = ens.factor_dtype
         self.data_version = 0
 
-        self.tables: Dict[str, DynamicTable] = {
-            t.name: DynamicTable(t, slack=slack) for t in sch.tables
-        }
-        # one maintained key dictionary per undirected join edge
-        self.edges: Dict[frozenset, DynamicEdge] = {}
-        for a, b, key in sch._undirected_edges:
-            self.edges[frozenset((a, b))] = DynamicEdge(
-                self.tables[a], self.tables[b], key
-            )
+        self.state = DynamicState(sch, slack=slack)
+        self.tables: Dict[str, DynamicTable] = self.state.tables
+        self.edges: Dict[frozenset, DynamicEdge] = self.state.edges
 
         # capacity-padded factors: source rows verbatim, dead slots ⊕-zero
         self.factors: Dict[str, jnp.ndarray] = {}
@@ -76,11 +84,11 @@ class MaintainedScorer:
         # jitted per-table delta-row mask evaluation (compile-once per
         # (table, delta-rows) shape — the apply() hot path)
         self._mask_fns: Dict[str, callable] = {}
+        # jitted path-restricted refresh programs, keyed by
+        # (root, dirty-set, jt version, message/factor shapes)
+        self._refresh_fns: Dict[tuple, tuple] = {}
 
         # per-root cached state (created lazily on first score)
-        self._jts: Dict[str, JoinTree] = {}
-        self._jt_version = 0                     # bumps on any id/key change
-        self._jt_built_at: Dict[str, int] = {}
         self._msgs: Dict[str, List[jnp.ndarray]] = {}
         self._dirty: Dict[str, Set[int]] = {}
         self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
@@ -90,97 +98,43 @@ class MaintainedScorer:
         return self.tables[table].capacity
 
     def live_rows(self, table: str) -> np.ndarray:
-        return self.tables[table].live_slots()
+        return self.state.live_rows(table)
 
     def effective_schema(self) -> Schema:
         """A fresh static Schema over the live rows (slot order) — the
         full-recompute oracle the maintained scores must match."""
-        return Schema(
-            [self.tables[t.name].effective() for t in self.schema.tables],
-            label=(self.schema.label_table, self.schema.label_column),
-        )
-
-    def _jt(self, root: str) -> JoinTree:
-        """Join tree for ``root`` with the MAINTAINED key-id arrays spliced
-        into the schema's static edge order."""
-        if self._jt_built_at.get(root) == self._jt_version and root in self._jts:
-            return self._jts[root]
-        base = self.schema.join_tree(root)
-        names = self.schema.names
-        edges = []
-        for e in base.edges:
-            de = self.edges[frozenset((names[e.child], names[e.parent]))]
-            edges.append(TreeEdge(
-                child=e.child, parent=e.parent, key_cols=e.key_cols,
-                child_ids=jnp.asarray(de.ids[names[e.child]], jnp.int32),
-                parent_ids=jnp.asarray(de.ids[names[e.parent]], jnp.int32),
-                n_keys=de.n_keys,
-            ))
-        jt = JoinTree(root=base.root, edges=tuple(edges))
-        self._jts[root] = jt
-        self._jt_built_at[root] = self._jt_version
-        return jt
+        return self.state.effective_schema()
 
     # -------------------------------------------------------------- deltas --
     def apply(self, deltas: Sequence[TableDelta]) -> int:
         """Apply a delta batch; returns the new ``data_version``.
 
-        Per table: mutate the dynamic store, re-evaluate leaf-mask factor
-        rows for just the changed slots, refresh incident key ids for
-        inserts, and mark the table dirty in every cached root's message
-        state.  Nothing global is recomputed here — the path-restricted
-        refresh happens lazily at the next score."""
+        Per table: mutate the dynamic store (via ``DynamicState``),
+        re-evaluate leaf-mask factor rows for just the changed slots, and
+        mark the table dirty in every cached root's message state.
+        Nothing global is recomputed here — the path-restricted refresh
+        happens lazily at the next score."""
         if isinstance(deltas, TableDelta):
             deltas = [deltas]
-        structural = False
-        for d in deltas:
-            if d.table not in self.tables:
-                raise KeyError(f"unknown table {d.table!r}")
-            dt = self.tables[d.table]
-            if d.updates is not None:
-                key_cols = {c for e in self.edges.values()
-                            if d.table in e.tables for c in e.key_cols}
-                bad = key_cols & set(d.updates[1])
-                if bad:
-                    raise ValueError(
-                        f"update of join-key columns {sorted(bad)} on "
-                        f"{d.table!r}: issue delete + insert instead"
-                    )
-            had_deletes = d.deletes is not None and len(d.deletes) > 0
-            n_ins = (len(next(iter(d.inserts.values()))) if d.inserts else 0)
-            changed, grew = dt.apply(d)
-
-            if grew:
-                structural = True
-                cur = self.factors[d.table]
-                self.factors[d.table] = jnp.concatenate([
+        for ch in self.state.apply(deltas):
+            if ch.grew:
+                cur = self.factors[ch.table]
+                cap = self.tables[ch.table].capacity
+                self.factors[ch.table] = jnp.concatenate([
                     cur,
-                    jnp.zeros((dt.capacity - cur.shape[0], cur.shape[1]),
-                              cur.dtype),
+                    jnp.zeros((cap - cur.shape[0], cur.shape[1]), cur.dtype),
                 ])
-            # inserts (tail of `changed`) need key ids on incident edges;
-            # key-domain growth is absorbed by refresh_messages' ⊕-identity
-            # padding, so only the id arrays (→ join trees) go stale here
-            if n_ins:
-                structural = True
-                ins_slots = changed[-n_ins:]
-                for e in self.edges.values():
-                    if d.table in e.tables:
-                        e.assign(dt, ins_slots)
             # zero deleted slots BEFORE scattering fresh rows: an insert in
             # this same delta may have reused a just-deleted slot
-            if had_deletes:
-                gone = jnp.asarray(np.unique(np.asarray(d.deletes, np.int64)),
-                                   jnp.int32)
-                self.factors[d.table] = self.factors[d.table].at[gone].set(0)
-            if len(changed):
-                self._refresh_factor_rows(d.table, changed)
-            if len(changed) or had_deletes:
-                ti = self.schema.index[d.table]
+            if len(ch.deleted):
+                gone = jnp.asarray(ch.deleted, jnp.int32)
+                self.factors[ch.table] = self.factors[ch.table].at[gone].set(0)
+            if len(ch.changed):
+                self._refresh_factor_rows(ch.table, ch.changed)
+            if len(ch.changed) or len(ch.deleted):
+                ti = self.schema.index[ch.table]
                 for root in self._msgs:
                     self._dirty.setdefault(root, set()).add(ti)
-        if structural:
-            self._jt_version += 1
         self._grouped.clear()
         self.data_version += 1
         return self.data_version
@@ -218,17 +172,57 @@ class MaintainedScorer:
         self.factors[table] = self.factors[table].at[sl].set(frows[:k])
 
     # ------------------------------------------------------------- scoring --
+    def _refresh_fn(self, root: str, dirty: frozenset, jt):
+        """Compiled path-restricted refresh for one (root, dirty-set,
+        shape fingerprint); returns (jitted fn, #edges it re-emits).
+        The plan is computed ONCE from :func:`refresh_plan` — the same
+        source of truth the eager route uses — so the cached program
+        re-emits exactly the edges the eager route would, and the edge
+        accounting (bumped eagerly by the caller) cannot drift."""
+        msgs = self._msgs[root]
+        fingerprint = (
+            root, dirty, self.state.jt_version,
+            tuple(m.shape for m in msgs),
+            tuple((tn, self.factors[tn].shape) for tn in sorted(self.factors)),
+        )
+        hit = self._refresh_fns.get(fingerprint)
+        if hit is not None:
+            return hit
+        sem, sp = self._sem, self._sp                # node_factor never bumps
+        plan = refresh_plan(jt, dirty)
+        pads = [max(0, e.n_keys - msgs[i].shape[0])
+                for i, e in enumerate(jt.edges)]
+
+        def run(factors, msgs):
+            new = list(msgs)
+            for i, e in enumerate(jt.edges):
+                if pads[i]:                          # key domain grew: ⊕-pad
+                    new[i] = jnp.concatenate(
+                        [new[i], sem.zeros((pads[i],))], axis=0
+                    )
+                if plan[i]:
+                    cf = sp.node_factor(sem, factors, jt, e.child, new)
+                    new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+            return new
+
+        out = (jax.jit(run), sum(plan))
+        if len(self._refresh_fns) > 128:             # bound compile cache
+            self._refresh_fns.clear()
+        self._refresh_fns[fingerprint] = out
+        return out
+
     def _counts(self, group_by: str) -> jnp.ndarray:
-        """Grouped leaf counts via cached messages + path refresh."""
-        jt = self._jt(group_by)
+        """Grouped leaf counts via cached messages + jitted path refresh."""
+        jt = self.state.jt(group_by)
         sem, sp = self._sem, self._sp
         dirty = self._dirty.get(group_by)
         if group_by not in self._msgs:
             self._msgs[group_by] = sp.messages(sem, self.factors, jt=jt)
         elif dirty:
-            self._msgs[group_by] = sp.refresh_messages(
-                sem, self.factors, self._msgs[group_by], dirty, jt
-            )
+            run, n_emit = self._refresh_fn(group_by, frozenset(dirty), jt)
+            self._msgs[group_by] = run(self.factors, self._msgs[group_by])
+            if self.counter is not None:
+                self.counter.bump_edges(n_emit)
         self._dirty[group_by] = set()
         return sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by])
 
@@ -276,7 +270,7 @@ class MaintainedScorer:
         """Full-recompute reference over the SAME maintained state (every
         edge re-emitted) — the benchmark baseline for the edge-count and
         latency ratios.  Does not touch the cached messages."""
-        jt = self._jt(group_by)
+        jt = self.state.jt(group_by)
         msgs = self._sp.messages(self._sem, self.factors, jt=jt)
         counts = self._sp.node_factor(self._sem, self.factors, jt, jt.root, msgs)
         tot = (counts @ self.leaf_values).astype(jnp.float32)

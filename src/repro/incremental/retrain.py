@@ -1,0 +1,404 @@
+"""Incremental relational boosting: maintained messages feed RETRAINING.
+
+The boosting loop is dominated by grouped sum-of-squared-residual
+queries; PR 2 maintains exactly those aggregates incrementally for
+*serving*.  Following "The Relational Data Borg is Learning", this
+module closes the loop back into training:
+
+- :class:`MaintainedEngine` is a :class:`~repro.core.engine.QueryEngine`
+  that answers the Booster's node-statistics queries (fused c3 channels,
+  leaf-pair counts, polynomial sketches) from a signature-keyed per-edge
+  message cache (:class:`~repro.core.sumprod.MessageCache`) over a
+  :class:`~repro.incremental.state.DynamicState` kept fresh under
+  :class:`TableDelta` streams.  Per query family it hashes each table's
+  concrete row mask (node-uniform tables collapse to one broadcast row),
+  and re-emits a segment-⊕ only on edges whose child subtree's
+  signatures miss the cache — unchanged-subtree messages are reused
+  across tree levels, across trees, and across deltas, so a delta-epoch
+  of boosting queries emits strictly fewer edges than the per-query
+  inside-out baseline (benchmarks/bench_retrain.py audits the ratio).
+
+- :class:`IncrementalBooster` wraps a :class:`Booster` bound to that
+  engine: ``apply(deltas)`` mutates the store and invalidates exactly
+  the changed tables' bases/signatures; ``refit(deltas, n_new_trees)``
+  warm-starts — it measures residual drift with a cheap sketched SSR
+  query, and only when drift exceeds the threshold appends (or, over a
+  tree budget, replaces the most recent) trees fitted on the residuals
+  of the frozen prefix.
+
+Why the engine is host-orchestrated (``jittable = False``): cache keys
+hash concrete mask bytes, which a traced level step cannot provide.
+Costs stay honest — every real segment-⊕ emission bumps
+``QueryCounter.edges`` (the direct engine's analytic accounting is the
+baseline), and tree-shape work stays batched over nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import QueryEngine
+from ..core.schema import Schema
+from ..core.semiring import Arithmetic, PolyFreq
+from ..core.sketch import monomial_coeff, monomial_freq
+from ..core.sumprod import MessageCache, QueryCounter, SumProd
+from ..core.trainer import BoostConfig, Booster, FitTrace
+from ..core.tree import TreeArrays
+from .deltas import TableDelta
+from .state import DynamicState, TableChange
+
+
+class MaintainedEngine(QueryEngine):
+    """Grouped boosting queries answered from maintained messages."""
+
+    jittable = False          # signatures hash concrete mask bytes
+    analytic_edges = False    # every real emission is counted here
+
+    def __init__(self, state: DynamicState,
+                 counter: Optional[QueryCounter] = None,
+                 max_cache_per_edge: int = 64):
+        self.state = state
+        self.counter = counter
+        self.cache = MessageCache(max_per_edge=max_cache_per_edge)
+        self._version: Dict[str, int] = {n: 0 for n in state.tables}
+        self._stale = set(state.tables)
+        # every state.apply — whoever issues it — flows through notify,
+        # so a shared DynamicState can never leave this engine stale
+        state.subscribe(self.notify)
+        # maintained projection dictionaries (the schema's static w_ids,
+        # made append-only so sketch hashes stay stable under churn)
+        self._proj: Dict[str, Dict[tuple, int]] = {n: {} for n in state.tables}
+        self._w_ids: Dict[str, np.ndarray] = {}
+
+    # ---------------------------------------------------------------- bind --
+    def bind(self, booster) -> None:
+        self.booster = booster
+        schema: Schema = booster.schema
+        self.schema = schema
+        if self.counter is None:
+            self.counter = booster.counter
+        self.sp = SumProd(schema, counter=self.counter)
+        self.c3 = booster.c3
+        self.sem = booster.sem
+        self.hashes = booster.hashes
+        self._ar = Arithmetic()
+        self._owned = {
+            t.name: [c for c in t.columns if schema.owner[c] == t.name]
+            for t in schema.tables
+        }
+        for name, dt in self.state.tables.items():
+            self._w_ids[name] = np.zeros((dt.capacity,), np.int64)
+            self._assign_proj(name, dt.live_slots())
+        self._live: Dict[str, jnp.ndarray] = {}
+        self._featmat: Dict[str, jnp.ndarray] = {}
+        self._c3_base: Dict[str, jnp.ndarray] = {}
+        self._cnt_base: Dict[str, jnp.ndarray] = {}
+        self._sk_base: Dict[str, jnp.ndarray] = {}
+        self._sk_label: Dict[str, jnp.ndarray] = {}
+        self.refresh()
+
+    # -------------------------------------------------------------- deltas --
+    def _assign_proj(self, table: str, slots: np.ndarray):
+        """Append-only projection ids for ``slots`` (changed/inserted
+        rows): an unseen projection tuple gets the next id — existing
+        rows keep theirs, so their sketch monomials (and any cached
+        message built from them) stay valid."""
+        dt = self.state.tables[table]
+        ids = self._w_ids[table]
+        if len(ids) < dt.capacity:                     # capacity grew
+            ids = np.concatenate(
+                [ids, np.zeros((dt.capacity - len(ids),), np.int64)]
+            )
+            self._w_ids[table] = ids
+        owned = self._owned.get(table)
+        if not owned or not len(slots):
+            return
+        proj = self._proj[table]
+        cols = [dt.columns[c] for c in owned]
+        for s in np.asarray(slots, np.int64):
+            key = tuple(c[s] for c in cols)
+            ids[s] = proj.setdefault(key, len(proj))
+
+    def notify(self, changes: Sequence[TableChange]):
+        """Invalidate per-table bases/signatures for applied deltas
+        (subscribed to ``DynamicState.apply``).  Bumping ``_version`` is
+        what retires cached messages: any edge whose child subtree
+        contains the table can no longer hit."""
+        for ch in changes:
+            if len(ch.changed) or len(ch.deleted) or ch.grew:
+                self._version[ch.table] += 1
+                self._stale.add(ch.table)
+                # pre-bind deltas need no projection upkeep: bind()
+                # assigns ids for every live slot from scratch
+                if hasattr(self, "_owned"):
+                    self._assign_proj(ch.table, ch.changed)
+
+    def refresh(self):
+        """Rebuild the query bases of stale tables (no-op when clean)."""
+        for name in sorted(self._stale):
+            self._rebuild(name)
+        self._stale.clear()
+
+    def _rebuild(self, name: str):
+        schema, dt = self.schema, self.state.tables[name]
+        cap = dt.capacity
+        live_np = dt.live.copy()
+        live = jnp.asarray(live_np)
+        self._live[name] = live
+        cols = schema.feat_cols[name]
+        if cols:
+            fm = np.stack(
+                [dt.columns[c][:cap].astype(np.float32) for c in cols], axis=1
+            )
+        else:
+            fm = np.zeros((cap, 0), np.float32)
+        self._featmat[name] = jnp.asarray(fm)
+        ones = live.astype(jnp.float32)
+        self._cnt_base[name] = ones
+        if name == schema.label_table:
+            lbl_np = dt.columns[schema.label_column][:cap].astype(np.float32)
+            lbl_np = np.where(live_np, lbl_np, 0.0)
+            lbl = jnp.asarray(lbl_np)
+            self._c3_base[name] = jnp.stack([ones, lbl, jnp.square(lbl)], -1)
+        else:
+            lbl = None
+            self._c3_base[name] = self.c3.mask(self.c3.ones((cap,)), live)
+        h = self.hashes.hashes[name]
+        w = jnp.asarray(self._w_ids[name][:cap])
+        mono = monomial_freq if isinstance(self.sem, PolyFreq) else monomial_coeff
+        m = self.sem.mask(mono(self.sem, h.sign(w), h.bucket(w)), live)
+        self._sk_base[name] = m
+        self._sk_label[name] = self.sem.scale(m, lbl) if lbl is not None else m
+
+    # ------------------------------------------------------------- queries --
+    def _combine(self, name: str, mask, extra):
+        """Canonical (K, capacity) keep mask: node masks ∧ optional leaf
+        mask ∧ liveness (dead slots' garbage feature bits must not leak
+        into signatures)."""
+        m = mask & self._live[name][None, :]
+        if extra is not None:
+            m = m & extra[None, :]
+        return m
+
+    def _grouped(self, kinds, bases, sem, table, keeps):
+        """One grouped query family: per-table signatures → memoized
+        message pass → root combine.  Node-uniform tables collapse to a
+        single broadcast row, making their signatures (and cached
+        messages) independent of the level's node count K.  ``kinds``:
+        base-identity tag per table (str applies to every table)."""
+        jt = self.state.jt(table)
+        K = next(iter(keeps.values())).shape[0]
+        factors, sigs = {}, {}
+        for name, keep in keeps.items():
+            k_np = np.asarray(keep)
+            uniform = K == 1 or bool((k_np == k_np[:1]).all())
+            rows = k_np[:1] if uniform else k_np
+            digest = hashlib.blake2b(rows.tobytes(), digest_size=12).digest()
+            kind = kinds if isinstance(kinds, str) else kinds[name]
+            sigs[name] = (kind, self._version[name], rows.shape[0], digest)
+            factors[name] = sem.mask(bases[name][None], jnp.asarray(rows))
+        msgs = self.sp.messages_memo(sem, factors, jt, sigs, self.cache)
+        out = self.sp.node_factor(sem, factors, jt, jt.root, msgs)
+        if out.shape[0] != K:
+            out = jnp.broadcast_to(out, (K,) + out.shape[1:])
+        return out
+
+    def grouped_c3(self, table, masks, extra=None):
+        self.refresh()
+        keeps = {
+            tn: self._combine(tn, masks[tn],
+                              None if extra is None else extra[tn])
+            for tn in masks
+        }
+        return self._grouped("c3", self._c3_base, self.c3, table, keeps)
+
+    def grouped_count_pair(self, table, masks, extra_a, extra_b):
+        self.refresh()
+        keeps = {
+            tn: self._combine(tn, masks[tn] & extra_a[tn][None, :],
+                              extra_b[tn])
+            for tn in masks
+        }
+        return self._grouped("cnt", self._cnt_base, self._ar, table, keeps)
+
+    def grouped_sketch(self, table, masks, extra=None, labeled=False):
+        self.refresh()
+        keeps = {
+            tn: self._combine(tn, masks[tn],
+                              None if extra is None else extra[tn])
+            for tn in masks
+        }
+        bases = self._sk_label if labeled else self._sk_base
+        # the labeled/unlabeled bases differ only at the label table —
+        # sharing the kind tag everywhere else lets their subtree
+        # messages interchange
+        kinds = {tn: (("skl" if labeled else "sku")
+                      if tn == self.schema.label_table else "sk")
+                 for tn in keeps}
+        return self._grouped(kinds, bases, self.sem, table, keeps)
+
+    # -------------------------------------------------------- data surface --
+    def n_rows(self, table):
+        return self.state.capacity(table)
+
+    def mask_featmat(self, table):
+        self.refresh()
+        return self._featmat[table]
+
+    def plan_featmats(self):
+        self.refresh()
+        out = {}
+        for name, dt in self.state.tables.items():
+            fm = np.asarray(self._featmat[name]).copy()
+            fm[~dt.live] = np.inf          # dead slots can't become thresholds
+            out[name] = fm
+        return out
+
+
+@dataclasses.dataclass
+class RefitReport:
+    """What one :meth:`IncrementalBooster.refit` call did and cost."""
+
+    refitted: bool
+    drift: float                 # relative residual (MSE) growth since last fit
+    mse_before: float
+    mse_after: float
+    n_new: int                   # trees fitted this call
+    n_trees: int                 # ensemble size after the call
+    queries: int                 # SumProd queries this call
+    edges: int                   # real segment-⊕ emissions this call
+    cache_hit_rate: float        # message-cache hit rate (lifetime)
+
+
+class IncrementalBooster:
+    """Delta-driven warm-start retraining on maintained messages."""
+
+    def __init__(self, schema: Schema, cfg: BoostConfig, key=None,
+                 slack: float = 0.25,
+                 counter: Optional[QueryCounter] = None,
+                 max_cache_per_edge: int = 64):
+        self.schema = schema
+        self.cfg = cfg
+        self.state = DynamicState(schema, slack=slack)
+        self.engine = MaintainedEngine(self.state, counter=counter,
+                                       max_cache_per_edge=max_cache_per_edge)
+        self.booster = Booster(schema, cfg, key=key, engine=self.engine)
+        # one counter for everything: analytic query counts from the
+        # trainer, real edge emissions from the engine
+        self.counter = self.engine.counter
+        self.booster.counter = self.counter
+        self.trees: List[TreeArrays] = []
+        self.trace = FitTrace()
+        self._mse_ref: Optional[float] = None
+
+    # -------------------------------------------------------------- deltas --
+    def apply(self, deltas: Sequence[TableDelta]) -> int:
+        """Mutate the store; the engine invalidates via its state
+        subscription, and bases/plans refresh lazily at next query."""
+        if isinstance(deltas, TableDelta):
+            deltas = [deltas]
+        self.state.apply(deltas)
+        return self.state.data_version
+
+    def live_rows(self, table: str) -> np.ndarray:
+        return self.state.live_rows(table)
+
+    def effective_schema(self) -> Schema:
+        return self.state.effective_schema()
+
+    # ----------------------------------------------------------- residuals --
+    def _leaf_state(self):
+        per_tree = [self.booster._leaf_masks(t) for t in self.trees]
+        prev_masks = {
+            t.name: jnp.concatenate([pm[t.name] for pm in per_tree])
+            for t in self.schema.tables
+        } if per_tree else {}
+        prev_vals = (jnp.concatenate([t.leaf for t in self.trees])
+                     if self.trees else jnp.zeros((0,), jnp.float32))
+        return prev_masks, prev_vals
+
+    def ensemble_mse(self) -> float:
+        """Mean squared residual of the CURRENT ensemble over the live
+        join — one sketched-SSR query family per frozen leaf, all served
+        from the message cache (repeat calls on unchanged data emit no
+        edges).  Sketched ⇒ (1±ε)-accurate, exactly the paper's Thm 3.4
+        guarantee; used as the refit drift signal."""
+        self.engine.refresh()
+        lbl = self.schema.label_table
+        masks = {
+            t.name: jnp.ones((1, self.state.capacity(t.name)), jnp.bool_)
+            for t in self.schema.tables
+        }
+        c3 = self.booster._grouped_c3(lbl, masks)          # (1, cap, 3)
+        n = float(jnp.sum(c3[..., 0]))
+        uy = float(jnp.sum(c3[..., 2]))
+        if not self.trees:
+            return uy / max(n, 1.0)
+        sem = self.booster.sem
+        resid = self.booster._grouped_sketch(lbl, masks, labeled=True)
+        prev_masks, prev_vals = self._leaf_state()
+        for a in range(int(prev_vals.shape[0])):
+            extra = {tn: prev_masks[tn][a] for tn in prev_masks}
+            s = self.booster._grouped_sketch(lbl, masks, extra=extra)
+            resid = resid - sem.scale(s, jnp.zeros(()) + prev_vals[a])
+        ssr = float(jnp.sum(sem.norm_sq(resid)))
+        return max(ssr, 0.0) / max(n, 1.0)
+
+    # ------------------------------------------------------------- fitting --
+    def fit(self) -> Tuple[List[TreeArrays], FitTrace]:
+        """From-scratch fit through the maintained engine."""
+        self.engine.refresh()
+        self.booster.refresh_plans()
+        self.trees, self.trace = self.booster.boost([], self.cfg.n_trees)
+        self._mse_ref = self.ensemble_mse()
+        return self.trees, self.trace
+
+    def refit(
+        self,
+        deltas: Optional[Sequence[TableDelta]] = None,
+        n_new_trees: int = 1,
+        drift_threshold: float = 0.0,
+        max_trees: Optional[int] = None,
+    ) -> RefitReport:
+        """Apply ``deltas`` (if any) and warm-start on the result.
+
+        Residual drift = relative MSE growth of the current ensemble on
+        the live data since the last (re)fit.  At or below
+        ``drift_threshold`` the model is left alone (the maintained
+        aggregates absorbed the delta); above it, ``n_new_trees`` trees
+        are fitted on the frozen ensemble's residuals.  With a
+        ``max_trees`` budget, the most recent trees are dropped first to
+        make room — they encode the finest residual structure, which the
+        delta invalidated."""
+        if deltas is not None:
+            self.apply(deltas)
+        self.engine.refresh()
+        self.booster.refresh_plans()
+        c = self.counter
+        q0, e0 = c.count, c.edges
+        mse0 = self.ensemble_mse()
+        drift = (float("inf") if self._mse_ref is None
+                 else (mse0 - self._mse_ref) / max(self._mse_ref, 1e-12))
+        if self.trees and drift <= drift_threshold:
+            return RefitReport(
+                refitted=False, drift=drift, mse_before=mse0, mse_after=mse0,
+                n_new=0, n_trees=len(self.trees),
+                queries=c.count - q0, edges=c.edges - e0,
+                cache_hit_rate=self.engine.cache.hit_rate,
+            )
+        if max_trees is not None:
+            keep = max(0, max_trees - n_new_trees)
+            self.trees = self.trees[:keep]
+        self.trees, self.trace = self.booster.boost(self.trees, n_new_trees)
+        mse1 = self.ensemble_mse()
+        self._mse_ref = mse1
+        return RefitReport(
+            refitted=True, drift=drift, mse_before=mse0, mse_after=mse1,
+            n_new=n_new_trees, n_trees=len(self.trees),
+            queries=c.count - q0, edges=c.edges - e0,
+            cache_hit_rate=self.engine.cache.hit_rate,
+        )

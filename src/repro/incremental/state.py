@@ -1,0 +1,156 @@
+"""Shared dynamic relational state for maintained views AND retraining.
+
+:class:`DynamicState` owns everything that makes a schema *mutable
+in place with stable identities*: the capacity-padded
+:class:`DynamicTable` stores, the append-only :class:`DynamicEdge` join
+key dictionaries, and per-root join trees with the maintained key-id
+arrays spliced into the schema's static edge order.  It applies
+:class:`TableDelta` batches and reports typed :class:`TableChange`
+records; what to DO about a change is the consumer's business:
+
+- :class:`~repro.incremental.maintain.MaintainedScorer` owns its state
+  and drives it through its own ``apply`` (which also re-evaluates
+  stacked leaf-mask factor rows and refreshes memoized scores).
+- ``MaintainedEngine`` (retrain.py) *subscribes* to its state
+  (:meth:`DynamicState.subscribe`): every ``apply`` — whoever issues
+  it — pushes the change records through the engine's invalidation
+  hook, re-building per-table query bases and bumping content versions
+  so cached boosting messages retire exactly where data changed.
+  Consumers that cache derived artifacts MUST subscribe rather than
+  poll; a direct ``state.apply`` then cannot leave them stale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.schema import JoinTree, Schema, Table, TreeEdge
+from .deltas import DynamicEdge, DynamicTable, TableDelta
+
+
+@dataclasses.dataclass(frozen=True)
+class TableChange:
+    """What one applied :class:`TableDelta` did to one table."""
+
+    table: str
+    changed: np.ndarray      # slots whose values changed (updates, then inserts)
+    deleted: np.ndarray      # slots whose live bit was cleared
+    n_inserted: int          # count of trailing insert slots in ``changed``
+    grew: bool               # capacity grew (factor arrays need padding)
+
+
+class DynamicState:
+    """Mutable mirror of a :class:`Schema` with stable row/key identities."""
+
+    def __init__(self, schema: Schema, slack: float = 0.25):
+        self.schema = schema
+        self.tables: Dict[str, DynamicTable] = {
+            t.name: DynamicTable(t, slack=slack) for t in schema.tables
+        }
+        # one maintained key dictionary per undirected join edge
+        self.edges: Dict[frozenset, DynamicEdge] = {}
+        for a, b, key in schema._undirected_edges:
+            self.edges[frozenset((a, b))] = DynamicEdge(
+                self.tables[a], self.tables[b], key
+            )
+        self.data_version = 0
+        self.jt_version = 0                      # bumps on any id/key change
+        self._jts: Dict[str, JoinTree] = {}
+        self._jt_built_at: Dict[str, int] = {}
+        self._listeners: List = []
+
+    def subscribe(self, fn) -> None:
+        """Register a change listener: ``fn(changes)`` is called after
+        every :meth:`apply` with the batch's :class:`TableChange`
+        records (cache owners invalidate here, not by polling)."""
+        self._listeners.append(fn)
+
+    # ------------------------------------------------------------- queries --
+    def capacity(self, table: str) -> int:
+        return self.tables[table].capacity
+
+    def live_rows(self, table: str) -> np.ndarray:
+        return self.tables[table].live_slots()
+
+    def effective_schema(self) -> Schema:
+        """A fresh static Schema over the live rows (slot order) — the
+        full-recompute oracle maintained results must match."""
+        return Schema(
+            [self.tables[t.name].effective() for t in self.schema.tables],
+            label=(self.schema.label_table, self.schema.label_column),
+        )
+
+    def jt(self, root: str) -> JoinTree:
+        """Join tree for ``root`` with the MAINTAINED key-id arrays spliced
+        into the schema's static edge order."""
+        if self._jt_built_at.get(root) == self.jt_version and root in self._jts:
+            return self._jts[root]
+        base = self.schema.join_tree(root)
+        names = self.schema.names
+        edges = []
+        for e in base.edges:
+            de = self.edges[frozenset((names[e.child], names[e.parent]))]
+            edges.append(TreeEdge(
+                child=e.child, parent=e.parent, key_cols=e.key_cols,
+                child_ids=jnp.asarray(de.ids[names[e.child]], jnp.int32),
+                parent_ids=jnp.asarray(de.ids[names[e.parent]], jnp.int32),
+                n_keys=de.n_keys,
+            ))
+        jt = JoinTree(root=base.root, edges=tuple(edges))
+        self._jts[root] = jt
+        self._jt_built_at[root] = self.jt_version
+        return jt
+
+    # -------------------------------------------------------------- deltas --
+    def apply(self, deltas: Sequence[TableDelta]) -> List[TableChange]:
+        """Apply a delta batch to the stores and key dictionaries;
+        returns per-delta change records in application order.  Bumps
+        ``jt_version`` on structural change (inserts / capacity growth)
+        and ``data_version`` once per batch."""
+        if isinstance(deltas, TableDelta):
+            deltas = [deltas]
+        changes: List[TableChange] = []
+        structural = False
+        for d in deltas:
+            if d.table not in self.tables:
+                raise KeyError(f"unknown table {d.table!r}")
+            dt = self.tables[d.table]
+            if d.updates is not None:
+                key_cols = {c for e in self.edges.values()
+                            if d.table in e.tables for c in e.key_cols}
+                bad = key_cols & set(d.updates[1])
+                if bad:
+                    raise ValueError(
+                        f"update of join-key columns {sorted(bad)} on "
+                        f"{d.table!r}: issue delete + insert instead"
+                    )
+            deleted = (np.unique(np.asarray(d.deletes, np.int64))
+                       if d.deletes is not None and len(d.deletes)
+                       else np.zeros((0,), np.int64))
+            n_ins = (len(next(iter(d.inserts.values()))) if d.inserts else 0)
+            changed, grew = dt.apply(d)
+            if grew:
+                structural = True
+            # inserts (tail of `changed`) need key ids on incident edges;
+            # key-domain growth is absorbed by ⊕-identity padding of any
+            # cached messages, so only the id arrays (→ join trees) go
+            # stale here
+            if n_ins:
+                structural = True
+                ins_slots = changed[-n_ins:]
+                for e in self.edges.values():
+                    if d.table in e.tables:
+                        e.assign(dt, ins_slots)
+            changes.append(TableChange(
+                table=d.table, changed=changed, deleted=deleted,
+                n_inserted=n_ins, grew=grew,
+            ))
+        if structural:
+            self.jt_version += 1
+        self.data_version += 1
+        for fn in self._listeners:
+            fn(changes)
+        return changes

@@ -291,3 +291,64 @@ def delta_stream(
                                         deletes=deletes, updates=updates))
         if batch:
             yield batch
+
+
+def drift_stream(
+    schema: Schema,
+    live_of: Callable[[str], np.ndarray],
+    seed: int = 0,
+    n_batches: int = 6,
+    rows_per_batch: int = 8,
+    feature_tables: Optional[Sequence[str]] = None,
+    label_shift: float = 0.75,
+    label_scale: float = 0.5,
+) -> Iterator[List[TableDelta]]:
+    """Concept-drift workload for incremental RETRAINING benchmarks.
+
+    Unlike :func:`delta_stream` (which churns rows but leaves the
+    label-generating process alone — a serving workload), each batch
+    here rewrites the feature values of live rows on one rotating
+    feature table AND shifts the labels of a random block of live
+    label-table rows.  Label perturbations are expressed in units of the
+    CURRENT live labels' std (y ← μ + shift·σ + scale·σ·ε), so the
+    drift severity is comparable across workloads whose label variances
+    differ by orders of magnitude.  The maintained aggregates absorb the
+    delta cheaply, but the *model* goes stale — the regime where
+    ``IncrementalBooster.refit`` must append trees, not just refresh
+    messages."""
+    rng = np.random.default_rng(seed)
+    key_cols = _key_columns(schema)
+    names = list(feature_tables) if feature_tables is not None else [
+        t.name for t in schema.tables
+    ]
+    lbl_t, lbl_c = schema.label_table, schema.label_column
+    # drift severity in units of the ORIGINAL label distribution (the
+    # dynamic store's current values aren't visible through `live_of`,
+    # and a fixed reference keeps repeated shifts from compounding)
+    y0 = np.asarray(schema.table(lbl_t).col(lbl_c)).astype(np.float64)
+    mu, sd = float(y0.mean()), float(y0.std() + 1e-9)
+    for b in range(n_batches):
+        batch: List[TableDelta] = []
+        name = names[b % len(names)]
+        t = schema.table(name)
+        live = live_of(name)
+        k = min(rows_per_batch, len(live))
+        if k:
+            slots = np.sort(rng.choice(live, size=k, replace=False))
+            cols = {
+                c: rng.standard_normal(k).astype(np.asarray(t.col(c)).dtype)
+                for c in t.feature_columns if c not in key_cols
+            }
+            if cols:
+                batch.append(TableDelta(table=name, updates=(slots, cols)))
+        livef = live_of(lbl_t)
+        kf = min(rows_per_batch, len(livef))
+        if kf:
+            fslots = np.sort(rng.choice(livef, size=kf, replace=False))
+            newy = (mu + label_shift * sd
+                    + label_scale * sd * rng.standard_normal(kf)
+                    ).astype(np.float32)
+            batch.append(TableDelta(table=lbl_t,
+                                    updates=(fslots, {lbl_c: newy})))
+        if batch:
+            yield batch

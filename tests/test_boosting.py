@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import BoostConfig, Booster, MaterializedBooster, predict_rows
+from repro.relational.generators import star_schema
 
 
 def _fit_all(sch, X, y, n_trees=3, depth=3, k=256):
@@ -109,6 +110,36 @@ def test_ssr_mode_off_same_trees(star):
     np.testing.assert_allclose(
         np.asarray(predict_rows(a, X)), np.asarray(predict_rows(b, X)), atol=1e-4
     )
+
+
+def test_sketch_ssr_envelope_across_seeds():
+    """Satellite: empirical SSR error of the sketched queries vs exact
+    stays within the (1+ε) envelope across PRNG seeds at the paper
+    config's sketch width (Thm 3.4: (1±ε) w.p. 1−δ for k = O((2+3^τ)/
+    (ε²δ))).  Empirical envelope at k=256, τ=3: ε=0.5 at δ=0.1, with a
+    much tighter mean."""
+    from repro.configs.paper_rbrt import CONFIG
+
+    k = CONFIG.sketch_k                      # 256, the paper config
+    errs = []
+    for seed in (0, 1, 2):
+        sch = star_schema(seed=seed, n_fact=150, n_dim=12)
+        _, tre = Booster(sch, BoostConfig(n_trees=2, depth=2,
+                                          mode="exact", seed=seed)).fit()
+        _, trs = Booster(sch, BoostConfig(n_trees=2, depth=2, mode="sketch",
+                                          sketch_k=k, seed=seed)).fit()
+        for e, s in zip(tre.node_ssr, trs.node_ssr):
+            for tbl in e:
+                if tbl == "fact":
+                    continue                 # singleton groups: sketch exact
+                ee, ss = np.asarray(e[tbl]), np.asarray(s[tbl])
+                m = ee > 1.0
+                if m.any():
+                    errs.append((np.abs(ss - ee) / ee)[m])
+    errs = np.concatenate(errs)
+    assert errs.size > 20                    # the sweep actually sampled
+    assert (errs > 0.5).mean() < 0.1, errs.max()      # (1+ε) envelope, δ=0.1
+    assert errs.mean() < 0.2, errs.mean()
 
 
 def test_predict_grouped(star):

@@ -263,6 +263,48 @@ def test_capacity_growth_preserves_scores(star):
     _assert_matches_oracle(ms, group)
 
 
+def test_jitted_refresh_compile_cache_and_edge_accounting(star):
+    """Satellite regression: the path-restricted refresh runs as a jitted
+    program cached per (root, dirty-set signature, shape fingerprint).
+    ``QueryCounter.edges`` accounting must be UNCHANGED vs the eager
+    route — one emission per edge on the dirty tables' root paths on
+    every refresh, compile-cache hits included — and the refreshed
+    messages must equal an eager full message pass."""
+    sch, J, X, y = star
+    c = QueryCounter()
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)), counter=c)
+    ms.grouped_cached("fact")
+    rng = np.random.default_rng(0)
+
+    def delta():
+        slots = ms.live_rows("dim0")[:3]
+        return [TableDelta("dim0", updates=(slots, {
+            col: rng.standard_normal(3).astype(np.float32)
+            for col in sch.table("dim0").feature_columns}))]
+
+    for _ in range(3):
+        ms.apply(delta())
+        e0 = c.edges
+        ms.grouped_cached("fact")
+        assert c.edges - e0 == 1            # star: dim0 root path = 1 edge
+        assert len(ms._refresh_fns) == 1    # one compiled program, reused
+    # refreshed messages ≡ eager full pass over the same factors
+    jt = ms.state.jt("fact")
+    fresh = ms._sp.messages(ms._sem, ms.factors, jt=jt)
+    for a, b in zip(ms._msgs["fact"], fresh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_matches_oracle(ms, "fact")
+    # a different dirty set compiles (and caches) its own program
+    slots = ms.live_rows("fact")[:2]
+    ms.apply([TableDelta("fact", updates=(slots, {
+        "x0": rng.standard_normal(2).astype(np.float32)}))])
+    e0 = c.edges
+    ms.grouped_cached("fact")
+    assert c.edges - e0 == 0                # root-only delta: no edge re-emits
+    assert len(ms._refresh_fns) == 2
+    _assert_matches_oracle(ms, "fact")
+
+
 # ----------------------------------------------------------------- service --
 
 def test_service_never_serves_stale_scores_across_deltas(star):

@@ -1,0 +1,225 @@
+"""Incremental relational boosting: the maintained-message engine must
+answer the Booster's node-statistics queries EXACTLY like the direct
+per-query engine — identical trees on fresh fits, identical warm-start
+trees after delta streams (differential vs a from-scratch Booster on the
+effective live tables) — while emitting strictly fewer segment-⊕
+messages; plus drift-gated refit semantics and engine-level units."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BoostConfig, Booster, QueryCounter, materialize_join, predict_rows,
+)
+from repro.incremental import IncrementalBooster, TableDelta
+from repro.relational.generators import (
+    chain_schema, delta_stream, drift_stream, snowflake_schema, star_schema,
+)
+
+CFG = dict(n_trees=2, depth=2, mode="sketch", ssr_mode="off")
+
+
+def _small(shape):
+    if shape == "star":
+        return star_schema(seed=31, n_fact=100, n_dim=10)
+    if shape == "chain":
+        return chain_schema(seed=32, n_rows=60, n_tables=3, fanout=2)
+    return snowflake_schema(seed=33, n_fact=70, n_dim=8, n_sub=4)
+
+
+def _assert_trees_match(a, b, atol=1e-5):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x.feat), np.asarray(y.feat))
+        np.testing.assert_allclose(np.asarray(x.thr), np.asarray(y.thr),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(x.leaf), np.asarray(y.leaf),
+                                   rtol=1e-4, atol=atol)
+
+
+# ------------------------------------------------------------ fresh fits --
+
+@pytest.mark.parametrize("shape", ["star", "chain", "snowflake"])
+def test_fresh_fit_matches_direct_engine(shape):
+    """Same queries, different evaluation route ⇒ the same model, for
+    strictly fewer segment-⊕ emissions."""
+    sch = _small(shape)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    trees_i, _ = ib.fit()
+    direct = Booster(sch, cfg)
+    trees_d, _ = direct.fit()
+    _assert_trees_match(trees_i, trees_d)
+    assert ib.counter.count == direct.counter.count      # same logical queries
+    assert ib.counter.edges < direct.counter.edges       # fewer emissions
+    assert ib.engine.cache.hits > 0
+
+
+def test_exact_mode_matches_direct_engine_with_ssr():
+    """Exact mode exercises the leaf-pair count queries and the SSR
+    trace through the maintained engine."""
+    sch = _small("star")
+    cfg = BoostConfig(n_trees=2, depth=2, mode="exact", ssr_mode="per_table")
+    ib = IncrementalBooster(sch, cfg)
+    trees_i, tr_i = ib.fit()
+    direct = Booster(sch, cfg)
+    trees_d, tr_d = direct.fit()
+    _assert_trees_match(trees_i, trees_d)
+    assert len(tr_i.node_ssr) == len(tr_d.node_ssr)
+    for si, sd in zip(tr_i.node_ssr, tr_d.node_ssr):
+        for tbl in sd:
+            np.testing.assert_allclose(np.asarray(si[tbl]),
+                                       np.asarray(sd[tbl]),
+                                       rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------- differential warm start --
+
+@pytest.mark.parametrize("shape", ["star", "chain", "snowflake"])
+def test_refit_on_delta_stream_matches_scratch_booster(shape):
+    """THE tentpole differential: after an arbitrary churn stream
+    (inserts with fresh join keys, deletes, updates, capacity growth),
+    warm-starting through the maintained engine must produce the same
+    new trees (f32 splits and leaf values) as a from-scratch direct
+    Booster on the effective live tables, warm-started from the same
+    frozen prefix."""
+    sch = _small(shape)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    frozen = list(ib.trees)
+    for batch in delta_stream(sch, ib.live_rows, seed=37, n_batches=3,
+                              ops_per_batch=5):
+        ib.apply(batch)
+    e0 = ib.counter.edges
+    rep = ib.refit(n_new_trees=2, drift_threshold=-np.inf)
+    assert rep.refitted and rep.n_new == 2 and len(ib.trees) == 4
+    inc_edges = ib.counter.edges - e0
+
+    eff = ib.effective_schema()
+    oracle = Booster(eff, cfg)
+    trees_o, _ = oracle.boost(list(frozen), 2)
+    _assert_trees_match(ib.trees, trees_o)
+    # frozen prefix untouched by the refit
+    for a, b in zip(ib.trees[:2], frozen):
+        assert a is b
+    # and the maintained delta-epoch emitted fewer edges than the oracle's
+    # warm start alone would (which itself is cheaper than its full fit)
+    assert inc_edges < oracle.counter.edges
+
+
+def test_refit_quality_parity_under_drift():
+    """Concept drift: refit model's MSE on the live join matches the
+    full-refit oracle within the sketching-tolerance band (gap ≤ 5% of
+    label variance)."""
+    sch = star_schema(seed=35, n_fact=120, n_dim=12)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    for batch in drift_stream(sch, ib.live_rows, seed=36, n_batches=2,
+                              rows_per_batch=4):
+        rep = ib.refit(deltas=batch, n_new_trees=2, drift_threshold=0.0)
+    eff = ib.effective_schema()
+    full = Booster(eff, BoostConfig(n_trees=len(ib.trees), depth=2,
+                                    mode="sketch", ssr_mode="off"))
+    trees_f, _ = full.fit()
+    J = materialize_join(eff)
+    X = jnp.stack([J[c] for (_, c) in eff.features], axis=1)
+    y = np.asarray(J[eff.label_column])
+    mse_i = float(np.mean((y - np.asarray(predict_rows(ib.trees, X))) ** 2))
+    mse_f = float(np.mean((y - np.asarray(predict_rows(trees_f, X))) ** 2))
+    var = float(np.var(y))
+    assert (mse_i - mse_f) / var <= 0.05, (mse_i, mse_f, var)
+    assert mse_i < 0.5 * var                 # and the model is actually good
+
+
+# ------------------------------------------------------- refit semantics --
+
+def test_refit_drift_gate_and_tree_budget():
+    sch = star_schema(seed=41, n_fact=80, n_dim=8)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    # unchanged data: drift 0 → gate holds, no trees, and the drift
+    # check itself is fully served from the message cache (0 emissions)
+    rep = ib.refit(n_new_trees=2, drift_threshold=0.01)
+    assert not rep.refitted and rep.n_new == 0 and rep.edges == 0
+    assert rep.drift == pytest.approx(0.0, abs=1e-9)
+
+    rng = np.random.default_rng(0)
+    def drift_batch():
+        live = ib.live_rows("fact")[:6]
+        return [TableDelta("fact", updates=(
+            live, {"y": (10.0 + rng.standard_normal(len(live))).astype(np.float32)}
+        ))]
+
+    # a real label shift: gate opens
+    rep = ib.refit(deltas=drift_batch(), n_new_trees=1, drift_threshold=0.01)
+    assert rep.refitted and rep.drift > 0.01 and len(ib.trees) == 3
+    assert rep.mse_after <= rep.mse_before + 1e-6
+
+    # absurd threshold: gate holds even under drift
+    rep = ib.refit(deltas=drift_batch(), n_new_trees=1, drift_threshold=1e9)
+    assert not rep.refitted and len(ib.trees) == 3
+
+    # tree budget: most recent trees are replaced, oldest survive
+    t0 = ib.trees[0]
+    rep = ib.refit(deltas=drift_batch(), n_new_trees=2,
+                   drift_threshold=-np.inf, max_trees=3)
+    assert rep.refitted and len(ib.trees) == 3
+    assert ib.trees[0] is t0
+
+
+# --------------------------------------------------------- engine units --
+
+def test_engine_grouped_c3_matches_direct_and_memoizes():
+    """Unit check of the memoized message pass: capacity-shaped grouped
+    stats equal the direct engine's on the live slots (dead slots 0),
+    for non-uniform node masks; repeating the family emits nothing."""
+    sch = star_schema(seed=51, n_fact=60, n_dim=8)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    direct = Booster(sch, cfg)
+    eng = ib.engine
+    rng = np.random.default_rng(1)
+    masks_cap, masks_n = {}, {}
+    for t in sch.tables:
+        cap, n = ib.state.capacity(t.name), t.n_rows
+        m = np.ones((2, cap), bool)
+        m[1, :] = rng.random(cap) < 0.6          # non-uniform second node
+        masks_cap[t.name] = jnp.asarray(m)
+        masks_n[t.name] = jnp.asarray(m[:, :n])  # initial slots ARE the rows
+    out_m = np.asarray(eng.grouped_c3("fact", masks_cap))
+    out_d = np.asarray(direct.engine.grouped_c3("fact", masks_n))
+    n = sch.table("fact").n_rows
+    np.testing.assert_allclose(out_m[:, :n], out_d, rtol=1e-5, atol=1e-5)
+    assert not out_m[:, n:].any()                # dead slots stay ⊕-zero
+    e0 = ib.counter.edges
+    np.testing.assert_array_equal(
+        np.asarray(eng.grouped_c3("fact", masks_cap)), out_m
+    )
+    assert ib.counter.edges == e0                # full cache hit
+
+
+def test_engine_invalidation_is_table_local():
+    """A delta on one dimension table must not retire cached messages of
+    subtrees that don't contain it: the next family re-emits only edges
+    on the dirty table's paths."""
+    sch = star_schema(seed=52, n_fact=60, n_dim=8, n_dim_tables=3)
+    cfg = BoostConfig(**CFG)
+    ib = IncrementalBooster(sch, cfg)
+    eng = ib.engine
+    masks = {t.name: jnp.ones((1, ib.state.capacity(t.name)), jnp.bool_)
+             for t in sch.tables}
+    eng.grouped_c3("fact", masks)
+    rng = np.random.default_rng(2)
+    ib.apply([TableDelta("dim1", updates=(
+        np.asarray([0, 1]),
+        {c: rng.standard_normal(2).astype(np.float32)
+         for c in sch.table("dim1").feature_columns},
+    ))])
+    e0 = ib.counter.edges
+    eng.grouped_c3("fact", masks)
+    # star grouped by fact: each dim's message is one edge; only dim1's
+    # signature changed
+    assert ib.counter.edges - e0 == 1
