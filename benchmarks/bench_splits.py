@@ -1,0 +1,180 @@
+"""Split-search benchmark: exact argsort sweep vs quantile-histogram sweep.
+
+  S1  Sweep wall-time + split-gain parity on star/chain/snowflake with
+      WIDE tables (d_t ≥ 8, n ≥ 4096): `best_split_for_table` is timed
+      jitted on realistic node statistics, exact vs hist (B=256).  The
+      histogram route must win wall-clock on every wide table — the
+      O(n)-length prefix scan and per-row score evaluation collapse to
+      O(B) — while the best split-gain stays within a few % of exact
+      (the candidate set is a quantile subsample of the exact sweep's;
+      the binned statistics themselves are exact per candidate).
+
+  S2  Plan-maintenance cost per delta-epoch: exact `refresh_plans`
+      rebuilds every table's float argsort wholesale (the cost ROADMAP
+      called out for maintained retraining); hist consumes the engine's
+      `plan_delta` and re-bins only delta-touched rows against frozen
+      edges.  Reports ms/epoch and rows re-binned per epoch — o(n) for
+      small deltas — and asserts the hist route is faster.
+
+    PYTHONPATH=src python benchmarks/bench_splits.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import BoostConfig
+from repro.core.hist import build_hist_plans
+from repro.core.splits import best_split_for_table, build_split_plans
+from repro.incremental import IncrementalBooster
+from repro.relational.generators import (
+    chain_schema, delta_stream, snowflake_schema, star_schema,
+)
+
+GAIN_GAP = 0.05          # hist top gain within 5% of the exact top gain
+N_BINS = 256
+
+
+def _wide_shapes(smoke: bool):
+    n = 4096 if smoke else 16384
+    return [
+        ("star", star_schema(seed=1, n_fact=n, n_dim=64, n_dim_tables=2,
+                             fact_feats=8), "fact"),
+        ("chain", chain_schema(seed=2, n_rows=n, n_tables=3,
+                               feats_per_table=8), "t0"),
+        ("snowflake", snowflake_schema(seed=3, n_fact=n, n_dim=32, n_sub=8,
+                                       fact_feats=8), "fact"),
+    ]
+
+
+def _node_stats(schema, table, K=8, seed=0):
+    """Realistic level stats: Bernoulli membership counts and residual
+    sums with real structure on feature 0 (so there IS a best split and
+    gain parity is meaningful, not noise-on-noise)."""
+    rng = np.random.default_rng(seed)
+    fm = np.asarray(schema.featmat[table])
+    rows = fm.shape[0]
+    n = (rng.random((K, rows)) < 0.8).astype(np.float32)
+    step = np.where(fm[:, 0] >= np.median(fm[:, 0]), 1.0, -1.0)
+    s = (0.5 * step[None, :] + 0.3 * rng.standard_normal((K, rows))
+         ).astype(np.float32) * n
+    return jnp.asarray(n), jnp.asarray(s)
+
+
+def _time(fn, *args, reps):
+    out = fn(*args)
+    jax.block_until_ready(out)                     # compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def s1_sweep(smoke: bool):
+    rows = []
+    reps = 20 if smoke else 50
+    for name, sch, table in _wide_shapes(smoke):
+        pe = build_split_plans(sch)[table]
+        ph = build_hist_plans(sch, n_bins=N_BINS)[table]
+        n, s = _node_stats(sch, table)
+        f_exact = jax.jit(lambda a, b: best_split_for_table(pe, a, b))
+        f_hist = jax.jit(lambda a, b: best_split_for_table(ph, a, b))
+        t_e = _time(f_exact, n, s, reps=reps)
+        t_h = _time(f_hist, n, s, reps=reps)
+        g_e = float(jnp.max(f_exact(n, s).score))
+        g_h = float(jnp.max(f_hist(n, s).score))
+        gap = (g_e - g_h) / max(abs(g_e), 1e-9)
+        d_t, n_rows = pe.order.shape
+        assert d_t >= 8 and n_rows >= 4096, (d_t, n_rows)
+        # wall-clock ordering is enforced only in full runs: CI smoke on a
+        # shared runner must not fail on scheduling noise (the other CI
+        # benchmarks gate on counted work / parity for the same reason)
+        if not smoke:
+            assert t_h < t_e, (
+                f"{name}: hist sweep must beat exact on wide tables "
+                f"({t_h:.2f}ms vs {t_e:.2f}ms)")
+        assert gap <= GAIN_GAP, (
+            f"{name}: top hist gain must track exact ({g_h} vs {g_e})")
+        rows.append({
+            "bench": "S1", "schema": name, "table": table,
+            "rows": n_rows, "d_t": d_t, "K": int(n.shape[0]),
+            "exact_ms": round(t_e, 2), "hist_ms": round(t_h, 2),
+            "speedup": round(t_e / t_h, 1), "gain_gap": round(gap, 4),
+        })
+    return rows
+
+
+def s2_plan_maintenance(smoke: bool):
+    rows = []
+    n_fact = 8192 if smoke else 32768
+    n_epochs = 4 if smoke else 8
+    sch = star_schema(seed=4, n_fact=n_fact, n_dim=64, n_dim_tables=2,
+                      fact_feats=8)
+    results = {}
+    for mode, extra in [("exact", {}),
+                        ("hist", dict(split_mode="hist", hist_bins=N_BINS))]:
+        cfg = BoostConfig(n_trees=1, depth=2, mode="sketch", ssr_mode="off",
+                          **extra)
+        ib = IncrementalBooster(sch, cfg)
+        ib.fit()
+        total_ms = 0.0
+        for batch in delta_stream(sch, ib.live_rows, seed=5,
+                                  n_batches=n_epochs, ops_per_batch=6):
+            ib.apply(batch)
+            t0 = time.perf_counter()
+            ib.booster.refresh_plans()
+            total_ms += (time.perf_counter() - t0) * 1e3
+        n_total = sum(ib.state.capacity(t.name) for t in sch.tables)
+        # re-bin work the maintenance path ACTUALLY performed (the
+        # plans' own drift meters, 0 in exact mode) — not the bench's
+        # input op count, so a regression to full re-binning fails here
+        rebinned = sum(getattr(p, "rebinned_since_edges", 0)
+                       for p in ib.booster.plans.values())
+        results[mode] = (total_ms / n_epochs, rebinned / n_epochs, n_total)
+    exact_ms, _, n_total = results["exact"]
+    hist_ms, rows_per_epoch, _ = results["hist"]
+    if not smoke:                        # timing gate: full runs only
+        assert hist_ms < exact_ms, (
+            f"incremental re-bin must beat argsort rebuild "
+            f"({hist_ms:.2f}ms vs {exact_ms:.2f}ms per epoch)")
+    assert 0 < rows_per_epoch < 0.05 * n_total, (
+        "per-epoch re-bin work must be o(n) and incremental (an edge "
+        "rebuild or full re-bin would show here)", rows_per_epoch, n_total)
+    rows.append({
+        "bench": "S2", "schema": f"star(n_fact={n_fact})",
+        "epochs": n_epochs,
+        "argsort_rebuild_ms_per_epoch": round(exact_ms, 2),
+        "incremental_rebin_ms_per_epoch": round(hist_ms, 2),
+        "speedup": round(exact_ms / hist_ms, 1),
+        "rows_rebinned_per_epoch": round(rows_per_epoch, 1),
+        "store_rows_total": n_total,
+    })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    args = ap.parse_args(argv)
+    rows = s1_sweep(args.smoke) + s2_plan_maintenance(args.smoke)
+    for r in rows:
+        print(r)
+    worst = min((r for r in rows if r["bench"] == "S1"),
+                key=lambda r: r["speedup"])
+    print(f"histogram sweep: ≥{worst['speedup']}× faster than the exact "
+          f"sweep on wide tables (gain gap ≤ {GAIN_GAP:.0%})")
+    s2 = next(r for r in rows if r["bench"] == "S2")
+    print(f"plan maintenance: {s2['speedup']}× faster per delta-epoch, "
+          f"re-binning {s2['rows_rebinned_per_epoch']} of "
+          f"{s2['store_rows_total']} rows")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

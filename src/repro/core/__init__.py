@@ -6,10 +6,12 @@ Public API:
     semirings                        — Arithmetic/Channels/PolyCoeff/PolyFreq/...
     TableHashes, sketch_factors      — tensor sketch (sketch.py)
     Booster, BoostConfig             — Algorithms 1–3 (trainer.py)
+    TableHistPlan, build_hist_plans  — quantile-histogram split plans (hist.py)
     MaterializedBooster              — the paper's baseline (baseline.py)
     TreeArrays, predict_rows         — trees (tree.py)
 """
 from .engine import DirectEngine, QueryEngine
+from .hist import TableHistPlan, build_hist_plans, quantile_cuts, refresh_hist_plans
 from .schema import NotAcyclicError, Schema, Table
 from .semiring import Arithmetic, BooleanSR, Channels, PolyCoeff, PolyFreq, Tropical
 from .sketch import Hash2, TableHashes, count_sketch_dense, sketch_factors, tensor_sketch_dense
@@ -25,5 +27,6 @@ __all__ = [
     "MessageCache", "QueryCounter", "SumProd", "materialize_join", "refresh_plan",
     "DirectEngine", "QueryEngine",
     "BoostConfig", "Booster", "FitTrace", "MaterializedBooster",
+    "TableHistPlan", "build_hist_plans", "quantile_cuts", "refresh_hist_plans",
     "TreeArrays", "leaf_masks", "predict_rows",
 ]

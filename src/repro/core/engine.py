@@ -30,6 +30,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .semiring import Arithmetic
 from .sketch import sketch_factors
@@ -87,6 +88,23 @@ class QueryEngine:
         """Per-table feature matrices for split plans (dead rows pushed
         to +inf so they never become thresholds); None → schema static."""
         raise NotImplementedError
+
+    def plan_featmat(self, table: str):
+        """The single-table complement of ``plan_featmats``: one
+        capacity-shaped (n_rows(table), d_t) float32 matrix, dead slots
+        at +inf.  Hist-plan edge re-quantization uses this so one
+        drifted table never materializes the whole store."""
+        raise NotImplementedError
+
+    def plan_delta(self):
+        """Per-table feature-row changes since the last call, consumed
+        on read: ``{table: (slots, vals)}`` with ``vals`` of shape
+        (len(slots), d_t) float32 and dead slots at +inf — the
+        O(|delta|) input to incremental hist-plan maintenance
+        (``Booster.refresh_plans``).  ``None`` means the engine does not
+        track deltas and the caller must rebuild plans wholesale; an
+        empty dict means nothing changed."""
+        return None
 
 
 class DirectEngine(QueryEngine):
@@ -168,3 +186,9 @@ class DirectEngine(QueryEngine):
 
     def plan_featmats(self):
         return None
+
+    def plan_featmat(self, table):
+        return np.asarray(self.schema.featmat[table], np.float32)
+
+    def plan_delta(self):
+        return {}                  # static schema: nothing ever changes

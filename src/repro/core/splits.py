@@ -11,8 +11,10 @@ where S = Σ residuals on a side; the −S²/n form is exactly the paper's
 ``−1/n_v (s²/n + z²/m − …)`` with node-constant terms dropped.  Candidate
 thresholds are the distinct values of the column (sort orders precomputed
 once per schema — the paper's per-query O(n log n) sort amortizes away).
-A quantile-histogram sweep (LightGBM-style) is a natural extension; the
-exact sweep is what the paper specifies and what is implemented here.
+The exact sweep here is what the paper specifies and the default; the
+quantile-histogram route (LightGBM-style, ``BoostConfig.split_mode =
+"hist"``) lives in hist.py and shares this module's feature-selection
+finisher — :func:`best_split_for_table` dispatches on the plan type.
 """
 from __future__ import annotations
 
@@ -102,59 +104,104 @@ class SplitResult:
     right_cnt: jnp.ndarray
 
 
-def best_split_for_table(
-    plan: TableSplitPlan,
-    n: jnp.ndarray,    # (K, rows) counts per node per row-of-T_i
-    s: jnp.ndarray,    # (K, rows) residual sums
-) -> SplitResult:
-    """Sweep all features of one table.  Score = S_L²/n_L + S_R²/n_R
-    (monotone-equivalent to −MSE; node-constant terms dropped)."""
+def score_boundaries(nl, sl, nr, sr, valid, thr_vals):
+    """Shared boundary scorer for both sweep routes: per-boundary left/
+    right stats ((K, d_t, nb) arrays, ``thr_vals`` broadcastable to
+    them) → per-(node, feature) best-boundary parts, each (K, d_t).
+    One implementation keeps the gain formula, epsilon, and invalid
+    sentinel identical across routes — the exact/hist parity the
+    differential tests pin depends on it."""
+    score = jnp.where(
+        valid,
+        jnp.square(sl) / jnp.maximum(nl, 1e-9)
+        + jnp.square(sr) / jnp.maximum(nr, 1e-9),
+        NEG,
+    )
+    p = jnp.argmax(score, axis=2)                    # (K, d_t)
+    take = lambda a: jnp.take_along_axis(a, p[..., None], axis=2)[..., 0]
+    thr = jnp.take_along_axis(
+        jnp.broadcast_to(thr_vals, score.shape), p[..., None], axis=2
+    )[..., 0]
+    return take(score), thr, take(sl), take(nl), take(sr), take(nr)
 
-    tot_n = jnp.sum(n, axis=1)     # (K,)
-    tot_s = jnp.sum(s, axis=1)
 
-    def one_feature(fi):
-        order = plan.order[fi]                      # (rows,)
-        vals = plan.sorted_vals[fi]
-        ns = jnp.take(n, order, axis=1)             # (K, rows)
+# peak-memory budget for the exact sweep's (K, block, rows) intermediates;
+# one block for every workload in the repo, a bounded unrolled loop beyond
+_EXACT_BLOCK_ELEMS = 1 << 25
+
+
+def _exact_scores(plan: TableSplitPlan, n, s, tot_n, tot_s):
+    """Exact sweep, batched over the feature axis: a (K, d_t, rows)
+    gather + cumsum scores every boundary of every feature at once (the
+    per-feature ``lax.map`` this replaces serialized an embarrassingly
+    parallel scan).  Very wide×tall tables process the feature axis in
+    blocks so peak memory stays bounded — within a block the sweep is
+    fully batched, and per-feature results are independent so blocking
+    cannot change them.  Returns per-(node, feature) best-boundary
+    arrays (score, thr, sl, nl, sr, nr), each (K, d_t)."""
+    d_t, rows = plan.order.shape
+    K = n.shape[0]
+    block = max(1, _EXACT_BLOCK_ELEMS // max(K * rows, 1))
+
+    def sweep(order, vals):                          # (block, rows) each
+        ns = jnp.take(n, order, axis=1)              # (K, block, rows)
         ss = jnp.take(s, order, axis=1)
-        cln = jnp.cumsum(ns, axis=1)                # inclusive: left of boundary p+1
-        cls = jnp.cumsum(ss, axis=1)
+        cln = jnp.cumsum(ns, axis=2)                 # inclusive: left of boundary p+1
+        cls = jnp.cumsum(ss, axis=2)
         # boundary after position p: threshold = vals[p+1]; valid iff value changes
-        nl, sl = cln[:, :-1], cls[:, :-1]           # (K, rows-1)
-        nr = tot_n[:, None] - nl
-        srr = tot_s[:, None] - sl
-        valid = (vals[1:] > vals[:-1])[None, :] & (nl > 0) & (nr > 0)
-        score = jnp.where(
-            valid,
-            jnp.square(sl) / jnp.maximum(nl, 1e-9)
-            + jnp.square(srr) / jnp.maximum(nr, 1e-9),
-            NEG,
-        )
-        p = jnp.argmax(score, axis=1)               # (K,)
-        take = lambda a: jnp.take_along_axis(a, p[:, None], axis=1)[:, 0]
-        return (
-            take(score),
-            jnp.broadcast_to(vals[1:], score.shape)[jnp.arange(score.shape[0]), p],
-            take(sl), take(nl), take(srr), take(nr),
-        )
+        nl, sl = cln[..., :-1], cls[..., :-1]        # (K, block, rows-1)
+        nr = tot_n[:, None, None] - nl
+        sr = tot_s[:, None, None] - sl
+        valid = (vals[:, 1:] > vals[:, :-1])[None] & (nl > 0) & (nr > 0)
+        return score_boundaries(nl, sl, nr, sr, valid, vals[None, :, 1:])
 
-    d_t = plan.order.shape[0]
-    res = jax.lax.map(one_feature, jnp.arange(d_t))
-    scores = res[0]                                  # (d_t, K)
-    fbest = _argmax_band(scores, axis=0)             # (K,) ties → lower gid
-    pick = lambda a: jnp.take_along_axis(a, fbest[None, :], axis=0)[0]
+    if block >= d_t:
+        return sweep(plan.order, plan.sorted_vals)
+    parts = [
+        sweep(plan.order[f0:f0 + block], plan.sorted_vals[f0:f0 + block])
+        for f0 in range(0, d_t, block)
+    ]
+    return tuple(jnp.concatenate(ps, axis=1) for ps in zip(*parts))
+
+
+def _best_feature(plan, scores, thr, sl, nl, sr, nr, tot_n, tot_s) -> SplitResult:
+    """Shared finisher for both sweep routes: per-(node, feature) best
+    boundaries ((K, d_t) arrays) → the per-node winning feature (banded
+    argmax, ties to the lower global feature id)."""
+    fbest = _argmax_band(scores, axis=1)             # (K,)
+    pick = lambda a: jnp.take_along_axis(a, fbest[:, None], axis=1)[:, 0]
     # subtract the no-split score so `score` is a true gain (≥ 0 when useful)
     base = jnp.square(tot_s) / jnp.maximum(tot_n, 1e-9)
     return SplitResult(
         score=pick(scores) - base,
         feature=jnp.take(plan.global_ids, fbest),
-        threshold=pick(res[1]),
-        left_sum=pick(res[2]),
-        left_cnt=pick(res[3]),
-        right_sum=pick(res[4]),
-        right_cnt=pick(res[5]),
+        threshold=pick(thr),
+        left_sum=pick(sl),
+        left_cnt=pick(nl),
+        right_sum=pick(sr),
+        right_cnt=pick(nr),
     )
+
+
+def best_split_for_table(
+    plan,              # TableSplitPlan (exact) | hist.TableHistPlan
+    n: jnp.ndarray,    # (K, rows) counts per node per row-of-T_i
+    s: jnp.ndarray,    # (K, rows) residual sums
+) -> SplitResult:
+    """Sweep all features of one table.  Score = S_L²/n_L + S_R²/n_R
+    (monotone-equivalent to −MSE; node-constant terms dropped).  The
+    route is chosen by the plan type: exact boundary sweep over argsort
+    orders, or the quantile-histogram sweep (hist.py) over maintained
+    bin maps."""
+    from .hist import TableHistPlan, hist_scores
+
+    tot_n = jnp.sum(n, axis=1)     # (K,)
+    tot_s = jnp.sum(s, axis=1)
+    if isinstance(plan, TableHistPlan):
+        parts = hist_scores(plan, n, s, tot_n, tot_s)
+    else:
+        parts = _exact_scores(plan, n, s, tot_n, tot_s)
+    return _best_feature(plan, *parts, tot_n, tot_s)
 
 
 def merge_table_results(results) -> SplitResult:

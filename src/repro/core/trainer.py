@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from .engine import DirectEngine, QueryEngine
+from .hist import build_hist_plans, refresh_hist_plans
 from .schema import Schema
 from .semiring import Channels, PolyCoeff, PolyFreq
 from .sketch import TableHashes
@@ -65,6 +66,12 @@ class BoostConfig:
     sketch_domain: str = "freq"      # "freq" (beyond-paper) | "coeff" (faithful FFT)
     min_gain: float = 1e-7
     ssr_mode: str = "per_table"      # "per_table" (faithful) | "once" | "off"
+    split_mode: str = "exact"        # "exact" (paper) | "hist" (quantile bins)
+    hist_bins: int = 256             # B: quantile bins per feature (hist mode)
+    hist_edge_tol: float = 0.25      # re-quantize a table's bin edges once this
+    #                                  fraction of its rows re-binned (0 = always)
+    hist_route: str = "auto"         # histogram accumulation: "auto" |
+    #                                  "gather" | "scatter" | "kernel" (Pallas)
     seed: int = 0
 
 
@@ -93,9 +100,13 @@ class Booster:
             PolyFreq(cfg.sketch_k) if cfg.sketch_domain == "freq" else PolyCoeff(cfg.sketch_k)
         )
         self.c3 = Channels(3)
+        if cfg.split_mode not in ("exact", "hist"):
+            raise ValueError(f"split_mode {cfg.split_mode!r}")
+        if cfg.hist_route not in ("auto", "gather", "scatter", "kernel"):
+            raise ValueError(f"hist_route {cfg.hist_route!r}")
         self.engine = engine if engine is not None else DirectEngine()
         self.engine.bind(self)
-        self.plans = build_split_plans(schema, featmats=self.engine.plan_featmats())
+        self.plans = self._build_plans()
         if self.engine.jittable:
             self._level_step = jax.jit(self._level_step_impl)
             self._leaf_masks = jax.jit(self._leaf_masks_impl)
@@ -103,11 +114,34 @@ class Booster:
             self._level_step = self._level_step_impl   # concrete mask bytes
             self._leaf_masks = self._leaf_masks_impl
 
+    def _build_plans(self):
+        featmats = self.engine.plan_featmats()
+        if self.cfg.split_mode == "hist":
+            return build_hist_plans(self.schema, featmats=featmats,
+                                    n_bins=self.cfg.hist_bins,
+                                    route=self.cfg.hist_route)
+        return build_split_plans(self.schema, featmats=featmats)
+
     def refresh_plans(self):
-        """Rebuild split plans from the engine's current feature matrices
-        (maintained engines call this after applying table deltas)."""
-        self.plans = build_split_plans(self.schema,
-                                       featmats=self.engine.plan_featmats())
+        """Refresh split plans against the engine's current feature
+        matrices (maintained engines call this per delta-epoch).  Exact
+        mode rebuilds every table's argsort order wholesale; hist mode
+        consumes the engine's ``plan_delta`` and re-bins only
+        delta-touched rows against frozen quantile edges (re-quantizing
+        a table's edges only past ``cfg.hist_edge_tol`` drift) —
+        O(|delta|) plan maintenance instead of O(n log n)."""
+        dirty = self.engine.plan_delta()   # always consumed: a full rebuild
+        #                                    below covers anything accumulated
+        if self.cfg.split_mode == "hist" and dirty is not None:
+            self.plans = refresh_hist_plans(
+                self.plans, dirty,
+                n_rows_fn=self.engine.n_rows,
+                featmat_fn=self.engine.plan_featmat,
+                n_bins=self.cfg.hist_bins,
+                edge_tol=self.cfg.hist_edge_tol,
+            )
+            return
+        self.plans = self._build_plans()
 
     # ------------------------------------------------------------- queries --
     def _grouped_c3(self, table, masks, extra=None):

@@ -26,6 +26,13 @@ module closes the loop back into training:
   tree budget, replaces the most recent) trees fitted on the residuals
   of the frozen prefix.
 
+- Split-plan maintenance is delta-driven too: the engine accumulates
+  touched slots from its state subscription and serves them through
+  :meth:`MaintainedEngine.plan_delta`, so in histogram split mode
+  (``BoostConfig.split_mode="hist"``) each ``refresh_plans`` re-bins
+  only delta rows against frozen quantile edges (``core/hist.py``)
+  instead of re-argsorting every table.
+
 Why the engine is host-orchestrated (``jittable = False``): cache keys
 hash concrete mask bytes, which a traced level step cannot provide.
 Costs stay honest — every real segment-⊕ emission bumps
@@ -66,6 +73,9 @@ class MaintainedEngine(QueryEngine):
         self.cache = MessageCache(max_per_edge=max_cache_per_edge)
         self._version: Dict[str, int] = {n: 0 for n in state.tables}
         self._stale = set(state.tables)
+        # slots whose feature values (or liveness) changed since the last
+        # plan_delta() consumption — the o(n) feed for hist-plan rebinning
+        self._plan_dirty: Dict[str, List[np.ndarray]] = {}
         # every state.apply — whoever issues it — flows through notify,
         # so a shared DynamicState can never leave this engine stale
         state.subscribe(self.notify)
@@ -132,6 +142,9 @@ class MaintainedEngine(QueryEngine):
             if len(ch.changed) or len(ch.deleted) or ch.grew:
                 self._version[ch.table] += 1
                 self._stale.add(ch.table)
+                touched = np.concatenate([ch.changed, ch.deleted])
+                if len(touched):
+                    self._plan_dirty.setdefault(ch.table, []).append(touched)
                 # pre-bind deltas need no projection upkeep: bind()
                 # assigns ids for every live slot from scratch
                 if hasattr(self, "_owned"):
@@ -250,12 +263,26 @@ class MaintainedEngine(QueryEngine):
         return self._featmat[table]
 
     def plan_featmats(self):
+        return {name: self.plan_featmat(name) for name in self.state.tables}
+
+    def plan_featmat(self, table):
         self.refresh()
+        fm = np.asarray(self._featmat[table]).copy()
+        fm[~self.state.tables[table].live] = np.inf    # dead slots can't
+        return fm                                      # become thresholds
+
+    def plan_delta(self):
+        """Slots touched since the last consumption, with their CURRENT
+        feature values straight from the dynamic store (multiple deltas
+        to one slot collapse; deleted slots read +inf) — O(|delta|·d_t)
+        host work, never a full-table scan.  Deltas applied before the
+        booster bound (and built full plans) may linger here; re-binning
+        them is idempotent."""
+        dirty, self._plan_dirty = self._plan_dirty, {}
         out = {}
-        for name, dt in self.state.tables.items():
-            fm = np.asarray(self._featmat[name]).copy()
-            fm[~dt.live] = np.inf          # dead slots can't become thresholds
-            out[name] = fm
+        for name, chunks in dirty.items():
+            slots = np.unique(np.concatenate(chunks))
+            out[name] = (slots, self.state.feature_rows(name, slots))
         return out
 
 

@@ -75,6 +75,23 @@ class DynamicState:
     def live_rows(self, table: str) -> np.ndarray:
         return self.tables[table].live_slots()
 
+    def feature_rows(self, table: str, slots: np.ndarray) -> np.ndarray:
+        """(len(slots), d_t) float32 feature values at ``slots``, dead
+        slots pushed to +inf — the payload incremental split-plan
+        maintenance re-bins (see ``core.hist.rebin_rows``): a dead
+        slot's stale column values must neither bin validly nor ever
+        become a threshold."""
+        dt = self.tables[table]
+        cols = self.schema.feat_cols[table]
+        slots = np.asarray(slots, np.int64)
+        if not cols:
+            return np.zeros((len(slots), 0), np.float32)
+        vals = np.stack(
+            [dt.columns[c][slots].astype(np.float32) for c in cols], axis=1
+        )
+        vals[~dt.live[slots]] = np.inf
+        return vals
+
     def effective_schema(self) -> Schema:
         """A fresh static Schema over the live rows (slot order) — the
         full-recompute oracle maintained results must match."""

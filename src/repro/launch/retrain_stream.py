@@ -44,6 +44,7 @@ def audit(ib: IncrementalBooster, cfg: BoostConfig):
     full = Booster(eff, BoostConfig(
         n_trees=len(ib.trees), depth=cfg.depth, mode=cfg.mode,
         sketch_k=cfg.sketch_k, ssr_mode="off", seed=cfg.seed,
+        split_mode=cfg.split_mode, hist_bins=cfg.hist_bins,
     ))
     trees_f, _ = full.fit()
     J = materialize_join(eff)
@@ -69,11 +70,17 @@ def main(argv=None):
     ap.add_argument("--drift-threshold", type=float, default=0.05)
     ap.add_argument("--max-trees", type=int, default=None)
     ap.add_argument("--audit-every", type=int, default=4)
+    ap.add_argument("--split-mode", default="exact",
+                    choices=["exact", "hist"],
+                    help="hist = quantile-histogram sweep with "
+                         "incrementally maintained bins (core/hist.py)")
+    ap.add_argument("--hist-bins", type=int, default=256)
     args = ap.parse_args(argv)
 
     schema = build_schema(args)
     cfg = BoostConfig(n_trees=args.trees, depth=args.depth, mode="sketch",
-                      ssr_mode="off", seed=args.seed)
+                      ssr_mode="off", seed=args.seed,
+                      split_mode=args.split_mode, hist_bins=args.hist_bins)
     ib = IncrementalBooster(schema, cfg)
     t0 = time.perf_counter()
     ib.fit()

@@ -1,0 +1,225 @@
+"""Quantile-histogram split search: differential equivalence with the
+exact sweep (bit-identical trees when every distinct value gets its own
+bin; quality parity under quantile subsampling), capacity-padding
+semantics (+inf dead slots bin invalid and never become thresholds, on
+both direct and maintained engines), and fresh-fit/route agreement."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BoostConfig, Booster, Schema, Table, build_hist_plans, materialize_join,
+    predict_rows, quantile_cuts,
+)
+from repro.core.hist import hist_scores
+from repro.core.splits import best_split_for_table, build_split_plans
+from repro.incremental import IncrementalBooster, TableDelta
+from repro.relational.generators import star_schema
+
+HIST = dict(split_mode="hist", hist_bins=64)
+
+
+def _assert_trees_match(a, b, thr_exact=False):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x.feat), np.asarray(y.feat))
+        if thr_exact:
+            np.testing.assert_array_equal(np.asarray(x.thr), np.asarray(y.thr))
+        else:
+            np.testing.assert_allclose(np.asarray(x.thr), np.asarray(y.thr),
+                                       rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(x.leaf), np.asarray(y.leaf),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def _discrete_schema(seed=7, n=200, n_vals=13):
+    """Low-cardinality float features: every distinct value fits in a
+    small bin budget, the regime where hist must equal exact."""
+    rng = np.random.default_rng(seed)
+    cols = {"k": rng.integers(0, 10, n).astype(np.int64)}
+    for f in range(3):
+        cols[f"x{f}"] = rng.choice(
+            np.linspace(-2, 2, n_vals), n).astype(np.float32)
+    cols["y"] = (cols["x0"] + np.where(cols["x1"] >= 0, 2.0, -1.0)
+                 + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    dim = {"k": np.arange(10, dtype=np.int64),
+           "d0": rng.choice(np.linspace(-1, 1, 7), 10).astype(np.float32)}
+    return Schema(
+        [Table("fact", cols, feature_columns=("x0", "x1", "x2")),
+         Table("dim", dim, feature_columns=("d0",))],
+        label=("fact", "y"),
+    )
+
+
+# ------------------------------------------------------------ equivalence --
+
+def test_hist_degenerates_to_exact_when_bins_cover_distinct():
+    """B ≥ #distinct values per column ⇒ the cut set equals the exact
+    sweep's candidates and the fitted trees are identical (features and
+    thresholds bit-for-bit — both draw thresholds from the data)."""
+    sch = _discrete_schema()
+    base = dict(n_trees=3, depth=3, mode="sketch", ssr_mode="off")
+    te, _ = Booster(sch, BoostConfig(**base)).fit()
+    th, _ = Booster(sch, BoostConfig(**base, split_mode="hist",
+                                     hist_bins=16)).fit()
+    _assert_trees_match(te, th, thr_exact=True)
+
+
+def test_hist_quality_parity_on_continuous_features():
+    """Quantile subsampling (B ≪ n distinct values) may pick different
+    splits, but model quality must stay within the 5%-of-variance
+    parity band of the exact sweep."""
+    sch = star_schema(seed=5, n_fact=300, n_dim=24)
+    base = dict(n_trees=3, depth=2, mode="sketch", ssr_mode="off")
+    te, _ = Booster(sch, BoostConfig(**base)).fit()
+    th, _ = Booster(sch, BoostConfig(**base, split_mode="hist",
+                                     hist_bins=32)).fit()
+    J = materialize_join(sch)
+    X = jnp.stack([J[c] for (_, c) in sch.features], axis=1)
+    y = np.asarray(J[sch.label_column])
+    mse_e = float(np.mean((y - np.asarray(predict_rows(te, X))) ** 2))
+    mse_h = float(np.mean((y - np.asarray(predict_rows(th, X))) ** 2))
+    var = float(np.var(y))
+    assert (mse_h - mse_e) / var <= 0.05, (mse_h, mse_e, var)
+    assert mse_h < 0.5 * var
+
+
+def test_hist_accumulation_routes_agree():
+    """The padded-gather route (CPU default) and the segment-⊕ scatter
+    route (kernels/segment_sum) build the same histograms — per-table
+    sweep outputs agree within f32 reduction-order noise."""
+    sch = star_schema(seed=11, n_fact=400, n_dim=16)
+    plans = build_hist_plans(sch, n_bins=32)
+    rng = np.random.default_rng(3)
+    for name, plan in plans.items():
+        rows = plan.n_rows
+        n = jnp.asarray(rng.random((4, rows)).astype(np.float32))
+        s = jnp.asarray(rng.standard_normal((4, rows)).astype(np.float32))
+        tot_n, tot_s = jnp.sum(n, axis=1), jnp.sum(s, axis=1)
+        g = hist_scores(plan, n, s, tot_n, tot_s, route="gather")
+        sc = hist_scores(plan, n, s, tot_n, tot_s, route="scatter")
+        for a, b in zip(g, sc):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_split_mode_validated():
+    sch = _discrete_schema()
+    with pytest.raises(ValueError, match="split_mode"):
+        Booster(sch, BoostConfig(split_mode="histo"))
+
+
+# ------------------------------------------------- capacity-pad semantics --
+
+def test_dead_slot_padding_bins_invalid_and_never_thresholds():
+    """Regression (direct-engine side): +inf dead rows in a
+    capacity-shaped featmat override must land in the invalid bin, stay
+    out of the quantile edges, and never be chosen as thresholds."""
+    sch = _discrete_schema(seed=19)
+    featmats = {}
+    for t in sch.tables:
+        fm = np.asarray(sch.featmat[t.name]).copy()
+        pad = np.full((7, fm.shape[1]), np.inf, np.float32)
+        featmats[t.name] = np.concatenate([fm, pad])
+    plans = build_hist_plans(sch, featmats=featmats, n_bins=16)
+    for name, plan in plans.items():
+        assert (plan.bins[:, -7:] == plan.n_bins).all()      # invalid bin
+        real = plan.cuts[plan.cuts < np.inf]
+        assert np.isfinite(real).all()                       # edges finite
+        # a sweep with uniform stats over ALL slots (dead included) must
+        # still return finite thresholds wherever a split exists
+        rows = plan.n_rows
+        n = jnp.ones((2, rows), jnp.float32)
+        s = jnp.asarray(
+            np.tile(np.linspace(-1, 1, rows, dtype=np.float32), (2, 1)))
+        res = best_split_for_table(plan, n, s)
+        assert np.isfinite(np.asarray(res.threshold)).all(), name
+
+
+def test_maintained_engine_dead_slots_after_deletes():
+    """Regression (maintained-engine side): after deletes the freed
+    slots' stale feature bytes sit at +inf in the plan featmats — they
+    re-bin invalid, and every split the refit selects keeps a finite
+    threshold (dead TREE nodes legitimately carry thr=+inf; live splits
+    never do)."""
+    sch = star_schema(seed=23, n_fact=80, n_dim=8)
+    cfg = BoostConfig(n_trees=2, depth=2, mode="sketch", ssr_mode="off",
+                      **HIST)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    live = ib.live_rows("fact")
+    ib.apply([TableDelta("fact", deletes=live[:10])])
+    rep = ib.refit(n_new_trees=2, drift_threshold=-np.inf)
+    assert rep.refitted
+    for name, plan in ib.booster.plans.items():
+        dead = ~ib.state.tables[name].live
+        assert (plan.bins[:, dead] == plan.n_bins).all(), name
+    for t in ib.trees:
+        feat, thr = np.asarray(t.feat), np.asarray(t.thr)
+        assert np.isfinite(thr[feat >= 0]).all()
+
+
+# ----------------------------------------------------------------- units --
+
+def test_quantile_cuts_properties():
+    rng = np.random.default_rng(0)
+    col = np.concatenate([rng.standard_normal(500).astype(np.float32),
+                          np.full(9, np.inf, np.float32)])
+    for B in (4, 16, 64):
+        cuts = quantile_cuts(col, B)
+        assert len(cuts) <= B - 1
+        assert np.isfinite(cuts).all()                  # +inf never a cut
+        assert (np.diff(cuts) > 0).all()                # distinct, ascending
+        finite = col[np.isfinite(col)]
+        assert np.isin(cuts, finite).all()              # cuts are data values
+        assert cuts.min() > finite.min()                # min can't be a cut
+    # low cardinality: every distinct value except the min becomes a cut
+    small = np.asarray([3.0, 1.0, 2.0, 1.0, 3.0], np.float32)
+    np.testing.assert_array_equal(quantile_cuts(small, 8),
+                                  np.asarray([2.0, 3.0], np.float32))
+
+
+def test_exact_sweep_feature_chunking_is_invisible(monkeypatch):
+    """The vectorized exact sweep blocks the feature axis when the
+    batched intermediates would exceed the memory budget; per-feature
+    results are independent, so a forced tiny block must reproduce the
+    single-block result bit-for-bit."""
+    from repro.core import splits as splits_mod
+
+    sch = star_schema(seed=37, n_fact=200, n_dim=16)
+    plans = build_split_plans(sch)
+    rng = np.random.default_rng(2)
+    for name, plan in plans.items():
+        rows = plan.order.shape[1]
+        n = jnp.asarray((rng.random((3, rows)) < 0.8).astype(np.float32))
+        s = jnp.asarray(rng.standard_normal((3, rows)).astype(np.float32)) * n
+        full = best_split_for_table(plan, n, s)
+        monkeypatch.setattr(splits_mod, "_EXACT_BLOCK_ELEMS", 3 * rows)
+        chunked = best_split_for_table(plan, n, s)
+        monkeypatch.undo()
+        for f in ("score", "feature", "threshold", "left_sum", "left_cnt",
+                  "right_sum", "right_cnt"):
+            np.testing.assert_array_equal(np.asarray(getattr(full, f)),
+                                          np.asarray(getattr(chunked, f)))
+
+
+def test_hist_plan_matches_exact_candidates_small():
+    """With per-value bins the hist sweep and the exact sweep score the
+    same candidate set — spot-check SplitResult equality on random node
+    stats (not just end-to-end trees)."""
+    sch = _discrete_schema(seed=29)
+    pe = build_split_plans(sch)
+    ph = build_hist_plans(sch, n_bins=16)
+    rng = np.random.default_rng(1)
+    for name in pe:
+        rows = pe[name].order.shape[1]
+        n = jnp.asarray((rng.random((3, rows)) < 0.8).astype(np.float32))
+        s = jnp.asarray(rng.standard_normal((3, rows)).astype(np.float32)) * n
+        re = best_split_for_table(pe[name], n, s)
+        rh = best_split_for_table(ph[name], n, s)
+        np.testing.assert_array_equal(np.asarray(re.feature),
+                                      np.asarray(rh.feature))
+        np.testing.assert_array_equal(np.asarray(re.threshold),
+                                      np.asarray(rh.threshold))
+        np.testing.assert_allclose(np.asarray(re.score),
+                                   np.asarray(rh.score), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,195 @@
+"""Property suite for histogram-binning invariants: the bin map is
+monotone in the column value, delta-driven re-binning equals a fresh
+re-bin against the same frozen edges bit-for-bit (host model AND
+through the maintained engine), and the histogram sweep degenerates to
+the exact sweep when every distinct value gets its own bin.
+
+Hypothesis-driven when available (requirements-dev.txt); the seeded
+deterministic sweeps exercise the same checkers so tier-1 keeps real
+coverage when hypothesis is absent (tests/_hypothesis_compat.py makes
+the @given tests skip cleanly)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import BoostConfig, Schema, Table, quantile_cuts
+from repro.core.hist import (
+    TableHistPlan, bin_values, build_hist_plans, rebin_rows,
+)
+from repro.core.splits import best_split_for_table, build_split_plans
+from repro.incremental import IncrementalBooster
+from repro.relational.generators import delta_stream, star_schema
+
+
+# ------------------------------------------------------------- checkers --
+
+def _check_monotone(col, n_bins):
+    cuts = quantile_cuts(col, n_bins)
+    bins = bin_values(cuts, col, n_bins)
+    finite = np.isfinite(col)
+    assert (bins[~finite] == n_bins).all()           # invalid bin
+    assert (bins[finite] < n_bins).all()
+    order = np.argsort(col[finite], kind="stable")
+    assert (np.diff(bins[finite][order]) >= 0).all()  # monotone in value
+    # every cut is crossed: x >= cut ⟺ bin(x) > bin(largest value < cut)
+    for j, c in enumerate(cuts):
+        assert (bins[finite] > j).sum() == (col[finite] >= c).sum()
+
+
+def _check_delta_rebin(base, updates, n_bins):
+    """Re-binning updated rows in place must equal re-binning the whole
+    final matrix against the SAME frozen edges, bit-for-bit."""
+    rng_cols = base.shape[1]
+    sch = Schema(
+        [Table("t", {**{f"x{f}": base[:, f] for f in range(rng_cols)},
+                     "y": np.zeros(len(base), np.float32)},
+               feature_columns=tuple(f"x{f}" for f in range(rng_cols)))],
+        label=("t", "y"),
+    )
+    plan = build_hist_plans(sch, n_bins=n_bins)["t"]
+    final = base.copy()
+    rows, vals = updates
+    final[rows] = vals
+    rebin_rows(plan, rows, vals)
+    for f in range(rng_cols):
+        expect = bin_values(plan.cuts[f, : plan.n_cuts[f]],
+                            final[:, f], plan.n_bins)
+        np.testing.assert_array_equal(plan.bins[f], expect)
+    assert plan.rebinned_since_edges == len(rows)
+
+
+def _check_degenerate(vals_pool, n, seed):
+    """Small value pool ⇒ per-value bins ⇒ hist sweep == exact sweep.
+    Node stats are small integers so per-candidate prefix sums are exact
+    in f32 regardless of accumulation order — the routes' scores are
+    then bitwise identical and the comparison can't flake on ulps."""
+    rng = np.random.default_rng(seed)
+    cols = {f"x{f}": rng.choice(vals_pool, n).astype(np.float32)
+            for f in range(2)}
+    cols["y"] = np.zeros(n, np.float32)
+    sch = Schema([Table("t", cols, feature_columns=("x0", "x1"))],
+                 label=("t", "y"))
+    pe = build_split_plans(sch)["t"]
+    ph = build_hist_plans(sch, n_bins=len(vals_pool) + 1)["t"]
+    nn = jnp.asarray((rng.random((3, n)) < 0.7).astype(np.float32))
+    ss = jnp.asarray(rng.integers(-3, 4, (3, n)).astype(np.float32)) * nn
+    re = best_split_for_table(pe, nn, ss)
+    rh = best_split_for_table(ph, nn, ss)
+    np.testing.assert_array_equal(np.asarray(re.feature),
+                                  np.asarray(rh.feature))
+    np.testing.assert_array_equal(np.asarray(re.threshold),
+                                  np.asarray(rh.threshold))
+    np.testing.assert_allclose(np.asarray(re.score), np.asarray(rh.score),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ hypothesis --
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=80),
+    st.integers(2, 20),
+)
+def test_bin_map_monotone_hypothesis(vals, n_bins):
+    _check_monotone(np.asarray(vals, np.float32), n_bins)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(0, 10 ** 6),
+    st.integers(5, 40),
+    st.integers(2, 12),
+)
+def test_delta_rebin_equals_fresh_hypothesis(seed, n, n_bins):
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((n, 2)).astype(np.float32)
+    k = int(rng.integers(1, n + 1))
+    rows = rng.choice(n, size=k, replace=False)
+    vals = rng.standard_normal((k, 2)).astype(np.float32)
+    vals[rng.random(k) < 0.2] = np.inf               # deletions
+    _check_delta_rebin(base, (rows, vals), n_bins)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 9))
+def test_hist_degenerates_to_exact_hypothesis(seed, n_vals):
+    _check_degenerate(np.linspace(-1, 1, n_vals), 60, seed)
+
+
+# -------------------------------------------------------- seeded fallback --
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_bin_map_monotone_seeded(seed):
+    rng = np.random.default_rng(seed)
+    col = rng.standard_normal(120).astype(np.float32)
+    col[rng.random(120) < 0.1] = np.inf
+    for n_bins in (2, 7, 32, 256):
+        _check_monotone(col, n_bins)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_delta_rebin_equals_fresh_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 40))
+    base = rng.standard_normal((n, 2)).astype(np.float32)
+    k = int(rng.integers(1, n + 1))
+    rows = rng.choice(n, size=k, replace=False)
+    vals = rng.standard_normal((k, 2)).astype(np.float32)
+    vals[rng.random(k) < 0.2] = np.inf
+    _check_delta_rebin(base, (rows, vals), int(rng.integers(2, 12)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_hist_degenerates_to_exact_seeded(seed):
+    _check_degenerate(np.linspace(-1, 1, 3 + 2 * seed), 60, seed)
+
+
+def test_rebin_capacity_growth_pads_invalid():
+    """Row-domain growth puts new slots in the invalid bin until their
+    values arrive — exactly where +inf dead padding belongs."""
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((10, 2)).astype(np.float32)
+    sch = Schema(
+        [Table("t", {"x0": base[:, 0], "x1": base[:, 1],
+                     "y": np.zeros(10, np.float32)},
+               feature_columns=("x0", "x1"))],
+        label=("t", "y"),
+    )
+    plan = build_hist_plans(sch, n_bins=8)["t"]
+    rebin_rows(plan, np.asarray([12]),
+               np.asarray([[0.0, 0.0]], np.float32), n_rows=16)
+    assert plan.n_rows == 16
+    assert (plan.bins[:, 10:12] == plan.n_bins).all()
+    assert (plan.bins[:, 13:] == plan.n_bins).all()
+    assert (plan.bins[:, 12] < plan.n_bins).all()
+
+
+def test_maintained_plans_track_store_through_delta_stream():
+    """Integration model-check: after an arbitrary churn stream with
+    frozen edges (huge tolerance), every maintained plan's bin map
+    equals a fresh re-bin of the engine's current capacity featmat
+    against those same edges, bit-for-bit — and only touched rows were
+    ever re-binned (o(n) maintenance)."""
+    sch = star_schema(seed=41, n_fact=90, n_dim=10)
+    cfg = BoostConfig(n_trees=1, depth=2, mode="sketch", ssr_mode="off",
+                      split_mode="hist", hist_bins=16, hist_edge_tol=1e9)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    for batch in delta_stream(sch, ib.live_rows, seed=43, n_batches=4,
+                              ops_per_batch=5):
+        ib.apply(batch)
+        ib.booster.refresh_plans()
+    fms = ib.engine.plan_featmats()
+    for name, plan in ib.booster.plans.items():
+        assert isinstance(plan, TableHistPlan)
+        fm = fms[name]
+        assert plan.n_rows == fm.shape[0]
+        for f in range(plan.bins.shape[0]):
+            expect = bin_values(plan.cuts[f, : plan.n_cuts[f]],
+                                fm[:, f], plan.n_bins)
+            np.testing.assert_array_equal(plan.bins[f], expect)
+        assert plan.rebinned_since_edges < plan.n_rows

@@ -133,6 +133,34 @@ def test_refit_quality_parity_under_drift():
     assert mse_i < 0.5 * var                 # and the model is actually good
 
 
+@pytest.mark.parametrize("shape", ["star", "chain", "snowflake"])
+def test_hist_refit_on_delta_stream_matches_scratch_booster(shape):
+    """The exact-mode differential, in histogram split mode: with
+    edge_tol=0 every dirty table re-quantizes its bin edges from the
+    live values, so after an arbitrary churn stream the maintained
+    warm start must select the same trees as a fresh hist-mode Booster
+    on the effective live tables (same frozen prefix) — binning, sweep,
+    and maintained queries all agree with the from-scratch route."""
+    sch = _small(shape)
+    cfg = BoostConfig(**CFG, split_mode="hist", hist_bins=32,
+                      hist_edge_tol=0.0)
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    frozen = list(ib.trees)
+    for batch in delta_stream(sch, ib.live_rows, seed=47, n_batches=3,
+                              ops_per_batch=5):
+        ib.apply(batch)
+    rep = ib.refit(n_new_trees=2, drift_threshold=-np.inf)
+    assert rep.refitted and len(ib.trees) == 4
+
+    eff = ib.effective_schema()
+    oracle = Booster(eff, cfg)
+    trees_o, _ = oracle.boost(list(frozen), 2)
+    _assert_trees_match(ib.trees, trees_o)
+    for a, b in zip(ib.trees[:2], frozen):
+        assert a is b
+
+
 # ------------------------------------------------------- refit semantics --
 
 def test_refit_drift_gate_and_tree_budget():
