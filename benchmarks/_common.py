@@ -1,0 +1,33 @@
+"""Shared BENCH_*.json emission for the benchmark smokes.
+
+Every ``bench_*.py`` funnels its result rows and headline metrics
+through :func:`emit`, which writes the schema-versioned
+``BENCH_<name>.json`` at the repo root (override with
+``REPRO_BENCH_DIR``).  Committing the artifacts is the perf trajectory;
+``benchmarks/report.py --check`` gates CI on them.  Headline metrics
+should prefer counted work (query/edge ratios) over wall-clock — they
+are scheduler-noise free and safe to pin.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs import BenchReport, enable_tracing
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# REPRO_TRACE=1 turns every span on for the whole bench run (the bench
+# modules import this first), so CI uploads a TRACE_<name>.jsonl next to
+# each BENCH file without per-bench flags
+if os.environ.get("REPRO_TRACE"):
+    enable_tracing()
+
+
+def emit(name: str, rows, metrics: dict, config: dict = None) -> str:
+    rep = BenchReport(name, config=config)
+    rep.add_rows(list(rows))
+    for k, v in metrics.items():
+        rep.set_metric(k, v)
+    path = rep.write(os.environ.get("REPRO_BENCH_DIR") or REPO_ROOT)
+    print(f"wrote {path}")
+    return path

@@ -21,6 +21,7 @@ import time
 
 import numpy as np
 
+from _common import emit
 from repro.core import BoostConfig, Booster, QueryCounter
 from repro.incremental import MaintainedScorer, TableDelta
 from repro.relational.generators import chain_schema, snowflake_schema, star_schema
@@ -164,6 +165,11 @@ def main(argv=None):
     assert ratio >= 2.0, f"expected path-local refresh, got ratio {ratio}"
     print(f"single-table delta on {widest['schema']}: {ratio}× fewer "
           f"segment-⊕ emissions than full recompute (exact scores)")
+    emit("incremental", rows, {
+        "edge_ratio_widest_star": ratio,
+        "oracle_exact": float(all(r.get("oracle_exact", True) for r in rows)),
+    }, config={"smoke": args.smoke})
+    return rows
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import argparse
 import numpy as np
 import jax.numpy as jnp
 
+from _common import emit
 from repro.core import BoostConfig, Booster, materialize_join, predict_rows
 from repro.incremental import IncrementalBooster
 from repro.relational.generators import (
@@ -156,6 +157,12 @@ def main(argv=None):
     print(f"delta-epoch refit: ≥{worst['edge_ratio']}× fewer emissions than "
           f"refit-from-scratch across shapes, MSE parity within sketching "
           f"tolerance")
+    emit("retrain", rows, {
+        "r1_edge_ratio_widest": widest["edge_ratio"],
+        "r2_edge_ratio_worst": worst["edge_ratio"],
+        "r2_parity_gap_worst": max(r["parity_gap_of_var"]
+                                   for r in rows if r["bench"] == "R2"),
+    }, config={"smoke": args.smoke})
     return rows
 
 

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core import (
     BoostConfig, Booster, QueryCounter, materialize_join, predict_rows,
 )
+from _common import emit
 from repro.relational.generators import star_schema
 from repro.serving import (
     ModelRegistry, RelationalScoringService, compile_ensemble,
@@ -99,12 +100,16 @@ def s2_service_qps(sch, trees, n_requests=2000, max_batch=64, max_wait_ms=1.0,
         return dt
 
     dt = asyncio.run(run())
-    st = service.stats
+    snap = service.stats_snapshot()
     return [{
         "bench": "S2", "requests": n_requests, "wall_s": round(dt, 3),
         "qps": int(n_requests / dt),
-        "batches": st.batches, "mean_batch": round(st.mean_batch, 1),
-        "cache_hit_pct": round(100 * st.cache_hits / max(st.requests, 1), 1),
+        "batches": snap["batches"], "mean_batch": round(snap["mean_batch"], 1),
+        "cache_hit_pct": round(100 * snap["cache_hit_rate"], 1),
+        "latency_ms_p50": round(snap["latency_ms"]["p50"], 3),
+        "latency_ms_p99": round(snap["latency_ms"]["p99"], 3),
+        "queue_wait_ms_p50": round(snap["queue_wait_ms"]["p50"], 3),
+        "queue_wait_ms_p99": round(snap["queue_wait_ms"]["p99"], 3),
     }]
 
 
@@ -121,8 +126,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
-    for r in run_all(fast=not args.full):
+    rows = run_all(fast=not args.full)
+    for r in rows:
         print(r)
+    s1 = next(r for r in rows if r["bench"] == "S1")
+    s2 = next(r for r in rows if r["bench"] == "S2")
+    emit("serving", rows, {
+        "eval_ratio": s1["eval_ratio"],
+        "qps": s2["qps"],
+        "cache_hit_pct": s2["cache_hit_pct"],
+        "latency_ms_p99": s2["latency_ms_p99"],
+    }, config={"full": args.full})
+    return rows
 
 
 if __name__ == "__main__":

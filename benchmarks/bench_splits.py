@@ -27,6 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from _common import emit
 from repro.core import BoostConfig
 from repro.core.hist import build_hist_plans
 from repro.core.splits import best_split_for_table, build_split_plans
@@ -173,6 +174,13 @@ def main(argv=None):
     print(f"plan maintenance: {s2['speedup']}× faster per delta-epoch, "
           f"re-binning {s2['rows_rebinned_per_epoch']} of "
           f"{s2['store_rows_total']} rows")
+    emit("splits", rows, {
+        "s1_gain_gap_worst": max(r["gain_gap"]
+                                 for r in rows if r["bench"] == "S1"),
+        "s2_rebin_frac": s2["rows_rebinned_per_epoch"]
+        / max(s2["store_rows_total"], 1),
+        "s2_speedup": s2["speedup"],
+    }, config={"smoke": args.smoke})
     return rows
 
 

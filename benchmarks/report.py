@@ -1,15 +1,30 @@
-"""Generate the EXPERIMENTS.md §Roofline table from artifacts.
+"""BENCH_*.json summary + CI gate, plus the EXPERIMENTS.md §Roofline table.
 
-Reports BOTH memory accountings per cell:
-  mem_hlo   — spec-defined HLO bytes of the jnp implementation (includes
-              the dense (S0×S0) f32 score traffic of every attention
-              block pair);
-  mem_fused — the TPU-target estimate: the attention pair charged its
-              analytic HBM IO only (q/k/v/out + grads), since
-              kernels/flash_attention keeps scores/probabilities in VMEM.
-Bottleneck/fraction are judged on the fused accounting (the deployed
-configuration); the HLO number is retained as the conservative bound.
+Default mode reads every ``BENCH_<name>.json`` in the bench dir (repo
+root unless ``--dir``/``REPRO_BENCH_DIR``) and prints the headline
+metrics per benchmark — the committed perf trajectory at a glance.
+
+``--check`` turns that into a gate for the nightly job.  It fails if
+
+  * a benchmark pinned in ``benchmarks/baselines.json`` has no BENCH
+    file,
+  * a BENCH file fails schema validation (``repro.obs.validate_bench``),
+  * a pinned metric regresses by more than 2× against its baseline:
+    ``min`` pins fail when value < baseline/2, ``max`` pins fail when
+    value > baseline*2.  The loose factor keeps count-derived ratios
+    honest without tripping on run-to-run noise.
+
+Baselines format (``benchmarks/baselines.json``)::
+
+    {"serving": {"eval_ratio": {"pin": 13.0, "kind": "min"}}, ...}
+
+``--roofline`` preserves the original report: the EXPERIMENTS.md
+§Roofline table from ``artifacts/roofline/*.json``, with both memory
+accountings per cell (mem_hlo = spec-defined HLO bytes; mem_fused = the
+TPU-target estimate with flash-attention pairs charged analytic HBM IO
+only).  Bottleneck/fraction are judged on the fused accounting.
 """
+import argparse
 import glob
 import json
 import os
@@ -19,6 +34,80 @@ sys.path.insert(0, "src")
 
 PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "baselines.json")
+
+
+# ------------------------------------------------------------------ bench
+
+def _bench_dir(arg):
+    return arg or os.environ.get("REPRO_BENCH_DIR") or REPO_ROOT
+
+
+def load_benches(bench_dir):
+    """{name: (doc|None, [errors])} for every BENCH_*.json present."""
+    from repro.obs import validate_bench
+    out = {}
+    for p in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        name = os.path.basename(p)[len("BENCH_"):-len(".json")]
+        try:
+            doc = json.load(open(p))
+        except (OSError, ValueError) as e:
+            out[name] = (None, [f"unreadable: {e}"])
+            continue
+        out[name] = (doc, validate_bench(doc))
+    return out
+
+
+def summarize(benches):
+    for name, (doc, errs) in sorted(benches.items()):
+        if errs:
+            print(f"BENCH_{name}: INVALID — {'; '.join(errs)}")
+            continue
+        metrics = ", ".join(f"{k}={v}" for k, v in
+                            sorted(doc.get("metrics", {}).items()))
+        print(f"BENCH_{name}: {len(doc.get('rows', []))} rows  [{metrics}]")
+
+
+def check(benches, baselines_path):
+    """Return a list of failure strings (empty = gate passes)."""
+    failures = []
+    try:
+        baselines = json.load(open(baselines_path))
+    except OSError:
+        return [f"baselines file missing: {baselines_path}"]
+    for bench, pins in sorted(baselines.items()):
+        if bench not in benches:
+            failures.append(f"{bench}: BENCH_{bench}.json missing")
+            continue
+        doc, errs = benches[bench]
+        if errs:
+            failures.extend(f"{bench}: schema — {e}" for e in errs)
+            continue
+        metrics = doc.get("metrics", {})
+        for metric, pin in sorted(pins.items()):
+            if metric not in metrics:
+                failures.append(f"{bench}.{metric}: metric missing")
+                continue
+            val, base, kind = metrics[metric], pin["pin"], pin["kind"]
+            if kind == "min" and val < base / 2:
+                failures.append(
+                    f"{bench}.{metric}: {val} < baseline {base}/2 "
+                    f"(>2× regression on a floor metric)")
+            elif kind == "max" and val > base * 2:
+                failures.append(
+                    f"{bench}.{metric}: {val} > baseline {base}×2 "
+                    f"(>2× regression on a ceiling metric)")
+    # schema-invalid files that aren't pinned still fail the gate: a
+    # benchmark that silently stops validating is itself a regression
+    for name, (_, errs) in sorted(benches.items()):
+        if errs and name not in baselines:
+            failures.extend(f"{name}: schema — {e}" for e in errs)
+    return failures
+
+
+# --------------------------------------------------------------- roofline
 
 def fused_pair_bytes(cfg, mb_or_b, dp=16, S0=512, train=True):
     N, Kh, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
@@ -67,7 +156,7 @@ def load_cell(path):
     }
 
 
-def main():
+def roofline_main():
     rows = [load_cell(p) for p in sorted(glob.glob("artifacts/roofline/*.json"))]
     hdr = ("arch", "shape", "compute", "mem_fused", "mem_hlo", "coll",
            "bottleneck", "fraction", "useful_ratio")
@@ -80,5 +169,34 @@ def main():
         json.dump(rows, f, indent=1)
 
 
+# ------------------------------------------------------------------- main
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="gate: fail on missing/invalid/regressed BENCH files")
+    ap.add_argument("--dir", default=None,
+                    help="bench dir (default: repo root or REPRO_BENCH_DIR)")
+    ap.add_argument("--baselines", default=BASELINES)
+    ap.add_argument("--roofline", action="store_true",
+                    help="emit the EXPERIMENTS.md roofline table instead")
+    args = ap.parse_args(argv)
+    if args.roofline:
+        roofline_main()
+        return 0
+    benches = load_benches(_bench_dir(args.dir))
+    summarize(benches)
+    if not args.check:
+        return 0
+    failures = check(benches, args.baselines)
+    if failures:
+        print(f"\nbench check FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nbench check OK: all pinned metrics within 2× of baseline")
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

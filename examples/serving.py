@@ -2,7 +2,10 @@
 
 Relational path (the paper's workload): train boosted trees in-database,
 compile the ensemble into the one-pass scorer, and serve interactive
-row-score traffic through the micro-batching service:
+row-score traffic through the micro-batching service.  Exits with a
+one-screen metrics summary table (latency quantiles, batch sizes, cache
+hit rates — see src/repro/obs/); pass ``--trace out.json`` to also
+record a Chrome trace of the run, loadable in Perfetto:
 
     PYTHONPATH=src python examples/serving.py
 

@@ -29,6 +29,8 @@ from typing import Dict, Hashable, Iterable, List, Optional, Set
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from .schema import Schema, JoinTree
 from .semiring import Semiring
 
@@ -41,17 +43,38 @@ class QueryCounter:
     inside-out pass emits one per join-tree edge, while an incremental
     refresh (see :meth:`SumProd.refresh_messages`) emits only along the
     changed tables' root paths — the ratio the IVM benchmarks report.
+
+    Back-compat shim over :mod:`repro.obs.metrics`: bumps come from
+    jitted callbacks and benchmark threads, so each instance owns
+    thread-safe :class:`~repro.obs.metrics.Counter`s and additionally
+    mirrors into the process registry's ``sumprod.queries`` /
+    ``sumprod.edges`` series (the aggregate the launch CLIs report).
+    ``count``/``edges`` read exactly what this instance accumulated —
+    per-counter accounting (the IVM ratios) is unchanged.
     """
 
     def __init__(self):
-        self.count = 0
-        self.edges = 0
+        self._count = _metrics.Counter("sumprod.queries")
+        self._edges = _metrics.Counter("sumprod.edges")
+        reg = _metrics.get_registry()
+        self._g_count = reg.counter("sumprod.queries")
+        self._g_edges = reg.counter("sumprod.edges")
+
+    @property
+    def count(self) -> int:
+        return self._count.value
+
+    @property
+    def edges(self) -> int:
+        return self._edges.value
 
     def bump(self, n: int = 1):
-        self.count += int(n)
+        self._count.inc(n)
+        self._g_count.inc(n)
 
     def bump_edges(self, n: int = 1):
-        self.edges += int(n)
+        self._edges.inc(n)
+        self._g_edges.inc(n)
 
 
 def refresh_plan(jt: JoinTree, dirty: Iterable[int]) -> List[bool]:
@@ -91,14 +114,19 @@ class MessageCache:
         self._store: Dict[tuple, "OrderedDict[Hashable, jnp.ndarray]"] = {}
         self.hits = 0
         self.misses = 0
+        reg = _metrics.get_registry()
+        self._g_hits = reg.counter("msgcache.hits")
+        self._g_misses = reg.counter("msgcache.misses")
 
     def get(self, root: int, edge: int, sig: Hashable):
         slot = self._store.get((root, edge))
         if slot is None or sig not in slot:
             self.misses += 1
+            self._g_misses.inc()
             return None
         slot.move_to_end(sig)
         self.hits += 1
+        self._g_hits.inc()
         return slot[sig]
 
     def put(self, root: int, edge: int, sig: Hashable, msg: jnp.ndarray):
@@ -174,9 +202,12 @@ class SumProd:
         if jt is None:
             jt = self.schema.join_tree(root)
         msgs: List[Optional[jnp.ndarray]] = [None] * len(jt.edges)
-        for i, e in enumerate(jt.edges):
-            cf = self.node_factor(sem, factors, jt, e.child, msgs)
-            msgs[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+        with _span("sumprod.messages", n_edges=len(jt.edges)):
+            for i, e in enumerate(jt.edges):
+                with _span("sumprod.emit", edge=i, child=e.child,
+                           parent=e.parent, n_keys=e.n_keys):
+                    cf = self.node_factor(sem, factors, jt, e.child, msgs)
+                    msgs[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
         if self.counter is not None:
             self.counter.bump_edges(len(jt.edges))
         return msgs  # type: ignore[return-value]
@@ -199,13 +230,16 @@ class SumProd:
         """
         plan = refresh_plan(jt, dirty)
         new = list(msgs)
-        for i, e in enumerate(jt.edges):
-            if new[i].shape[0] < e.n_keys:
-                pad = sem.zeros((e.n_keys - new[i].shape[0],))
-                new[i] = jnp.concatenate([new[i], pad], axis=0)
-            if plan[i]:
-                cf = self.node_factor(sem, factors, jt, e.child, new)
-                new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+        with _span("sumprod.refresh", n_edges=sum(plan)):
+            for i, e in enumerate(jt.edges):
+                if new[i].shape[0] < e.n_keys:
+                    pad = sem.zeros((e.n_keys - new[i].shape[0],))
+                    new[i] = jnp.concatenate([new[i], pad], axis=0)
+                if plan[i]:
+                    with _span("sumprod.emit", edge=i, child=e.child,
+                               parent=e.parent, n_keys=e.n_keys):
+                        cf = self.node_factor(sem, factors, jt, e.child, new)
+                        new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
         if self.counter is not None:
             self.counter.bump_edges(sum(plan))
         return new
@@ -249,8 +283,10 @@ class SumProd:
                     cache.put(jt.root, i, sig, hit)
                 msgs[i] = hit
                 continue
-            cf = self.node_factor(sem, factors, jt, e.child, msgs)
-            msgs[i] = self._segment_add_any(sem, cf, e.child_ids, e.n_keys)
+            with _span("sumprod.emit", edge=i, child=e.child,
+                       parent=e.parent, n_keys=e.n_keys):
+                cf = self.node_factor(sem, factors, jt, e.child, msgs)
+                msgs[i] = self._segment_add_any(sem, cf, e.child_ids, e.n_keys)
             cache.put(jt.root, i, sig, msgs[i])
             recomputed += 1
         if self.counter is not None:

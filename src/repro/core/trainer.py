@@ -40,12 +40,14 @@ eagerly so message signatures can hash concrete masks.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..obs import fence, get_registry, span
 from .engine import DirectEngine, QueryEngine
 from .hist import build_hist_plans, refresh_hist_plans
 from .schema import Schema
@@ -130,18 +132,24 @@ class Booster:
         delta-touched rows against frozen quantile edges (re-quantizing
         a table's edges only past ``cfg.hist_edge_tol`` drift) —
         O(|delta|) plan maintenance instead of O(n log n)."""
+        t0 = time.perf_counter()
         dirty = self.engine.plan_delta()   # always consumed: a full rebuild
         #                                    below covers anything accumulated
         if self.cfg.split_mode == "hist" and dirty is not None:
-            self.plans = refresh_hist_plans(
-                self.plans, dirty,
-                n_rows_fn=self.engine.n_rows,
-                featmat_fn=self.engine.plan_featmat,
-                n_bins=self.cfg.hist_bins,
-                edge_tol=self.cfg.hist_edge_tol,
-            )
-            return
-        self.plans = self._build_plans()
+            with span("plan.refresh", mode="hist",
+                      tables=len(dirty), rows=sum(len(s) for s, _ in dirty.values())):
+                self.plans = refresh_hist_plans(
+                    self.plans, dirty,
+                    n_rows_fn=self.engine.n_rows,
+                    featmat_fn=self.engine.plan_featmat,
+                    n_bins=self.cfg.hist_bins,
+                    edge_tol=self.cfg.hist_edge_tol,
+                )
+        else:
+            with span("plan.refresh", mode=self.cfg.split_mode, full_rebuild=True):
+                self.plans = self._build_plans()
+        get_registry().histogram("train.plan_refresh_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
 
     # ------------------------------------------------------------- queries --
     def _grouped_c3(self, table, masks, extra=None):
@@ -221,12 +229,14 @@ class Booster:
         node_n = None
         for i, tn in enumerate(self.plans):
             want_ssr = cfg.ssr_mode == "per_table" or (cfg.ssr_mode == "once" and i == 0)
-            n, s, ssr = self._table_stats(tn, masks, prev_masks, prev_vals, want_ssr)
+            with span("boost.stats", table=tn):
+                n, s, ssr = self._table_stats(tn, masks, prev_masks, prev_vals, want_ssr)
             if i == 0:
                 node_n = jnp.sum(n, axis=1)
             if ssr is not None:
                 ssr_out[tn] = ssr
-            results.append(best_split_for_table(self.plans[tn], n, s))
+            with span("boost.sweep", table=tn, mode=cfg.split_mode):
+                results.append(fence(best_split_for_table(self.plans[tn], n, s)))
         best: SplitResult = merge_table_results(results)
 
         valid = jnp.isfinite(best.score) & (best.score > cfg.min_gain)
@@ -294,9 +304,14 @@ class Booster:
         M = int(prev_vals.shape[0])
 
         for level in range(cfg.depth):
-            feat, thr, node_mean, masks, ssr, node_n = self._level_step(
-                masks, prev_masks, prev_vals, node_mean
-            )
+            t0 = time.perf_counter()
+            with span("boost.level", level=level, prev_leaves=M):
+                feat, thr, node_mean, masks, ssr, node_n = self._level_step(
+                    masks, prev_masks, prev_vals, node_mean
+                )
+                fence((feat, thr, node_mean))
+            get_registry().histogram("train.level_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
             start = 2 ** level - 1
             tree = TreeArrays(
                 feat=jax.lax.dynamic_update_slice_in_dim(tree.feat, feat, start, 0),
@@ -325,10 +340,24 @@ class Booster:
         trace reports THIS call's query cost (the lifetime total lives
         on ``self.counter``)."""
         trace = trace if trace is not None else FitTrace()
+        reg = get_registry()
         q0 = self.counter.count
         trees = list(trees)
         for _ in range(n_trees):
-            trees.append(self._fit_tree(trees, trace))
+            t0 = time.perf_counter()
+            rq, re = self.counter.count, self.counter.edges
+            with span("boost.round", round=len(trees),
+                      mode=self.cfg.mode, split_mode=self.cfg.split_mode):
+                trees.append(self._fit_tree(trees, trace))
+            # per-round training telemetry: wall time, query volume, and
+            # segment-⊕ emissions (real or analytic per the engine)
+            reg.histogram("train.round_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
+            reg.histogram("train.round_queries").observe(
+                self.counter.count - rq)
+            reg.histogram("train.round_edges").observe(
+                self.counter.edges - re)
+            reg.counter("train.rounds").inc()
         trace.queries = self.counter.count - q0
         return trees, trace
 

@@ -38,10 +38,13 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import get_registry, span
 from ..core.schema import Schema
 from ..core.sumprod import QueryCounter, SumProd, refresh_plan
 from ..serving.compile import CompiledEnsemble, compile_ensemble, stack_table_factor
@@ -116,27 +119,32 @@ class MaintainedScorer:
         happens lazily at the next score."""
         if isinstance(deltas, TableDelta):
             deltas = [deltas]
-        for ch in self.state.apply(deltas):
-            if ch.grew:
-                cur = self.factors[ch.table]
-                cap = self.tables[ch.table].capacity
-                self.factors[ch.table] = jnp.concatenate([
-                    cur,
-                    jnp.zeros((cap - cur.shape[0], cur.shape[1]), cur.dtype),
-                ])
-            # zero deleted slots BEFORE scattering fresh rows: an insert in
-            # this same delta may have reused a just-deleted slot
-            if len(ch.deleted):
-                gone = jnp.asarray(ch.deleted, jnp.int32)
-                self.factors[ch.table] = self.factors[ch.table].at[gone].set(0)
-            if len(ch.changed):
-                self._refresh_factor_rows(ch.table, ch.changed)
-            if len(ch.changed) or len(ch.deleted):
-                ti = self.schema.index[ch.table]
-                for root in self._msgs:
-                    self._dirty.setdefault(root, set()).add(ti)
+        t0 = time.perf_counter()
+        with span("ivm.apply", n_deltas=len(deltas)):
+            for ch in self.state.apply(deltas):
+                if ch.grew:
+                    cur = self.factors[ch.table]
+                    cap = self.tables[ch.table].capacity
+                    self.factors[ch.table] = jnp.concatenate([
+                        cur,
+                        jnp.zeros((cap - cur.shape[0], cur.shape[1]), cur.dtype),
+                    ])
+                # zero deleted slots BEFORE scattering fresh rows: an insert in
+                # this same delta may have reused a just-deleted slot
+                if len(ch.deleted):
+                    gone = jnp.asarray(ch.deleted, jnp.int32)
+                    self.factors[ch.table] = self.factors[ch.table].at[gone].set(0)
+                if len(ch.changed):
+                    self._refresh_factor_rows(ch.table, ch.changed)
+                if len(ch.changed) or len(ch.deleted):
+                    ti = self.schema.index[ch.table]
+                    for root in self._msgs:
+                        self._dirty.setdefault(root, set()).add(ti)
         self._grouped.clear()
         self.data_version += 1
+        reg = get_registry()
+        reg.counter("ivm.deltas").inc(len(deltas))
+        reg.histogram("ivm.apply_ms").observe((time.perf_counter() - t0) * 1e3)
         return self.data_version
 
     def _refresh_factor_rows(self, table: str, slots: np.ndarray):
@@ -219,10 +227,14 @@ class MaintainedScorer:
         if group_by not in self._msgs:
             self._msgs[group_by] = sp.messages(sem, self.factors, jt=jt)
         elif dirty:
-            run, n_emit = self._refresh_fn(group_by, frozenset(dirty), jt)
-            self._msgs[group_by] = run(self.factors, self._msgs[group_by])
+            t0 = time.perf_counter()
+            with span("ivm.refresh", root=group_by, dirty=len(dirty)):
+                run, n_emit = self._refresh_fn(group_by, frozenset(dirty), jt)
+                self._msgs[group_by] = run(self.factors, self._msgs[group_by])
             if self.counter is not None:
                 self.counter.bump_edges(n_emit)
+            get_registry().histogram("ivm.refresh_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
         self._dirty[group_by] = set()
         return sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by])
 

@@ -43,11 +43,13 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import get_registry, span
 from ..core.engine import QueryEngine
 from ..core.schema import Schema
 from ..core.semiring import Arithmetic, PolyFreq
@@ -152,9 +154,12 @@ class MaintainedEngine(QueryEngine):
 
     def refresh(self):
         """Rebuild the query bases of stale tables (no-op when clean)."""
-        for name in sorted(self._stale):
-            self._rebuild(name)
-        self._stale.clear()
+        if not self._stale:
+            return
+        with span("engine.refresh", tables=len(self._stale)):
+            for name in sorted(self._stale):
+                self._rebuild(name)
+            self._stale.clear()
 
     def _rebuild(self, name: str):
         schema, dt = self.schema, self.state.tables[name]
@@ -206,16 +211,18 @@ class MaintainedEngine(QueryEngine):
         jt = self.state.jt(table)
         K = next(iter(keeps.values())).shape[0]
         factors, sigs = {}, {}
-        for name, keep in keeps.items():
-            k_np = np.asarray(keep)
-            uniform = K == 1 or bool((k_np == k_np[:1]).all())
-            rows = k_np[:1] if uniform else k_np
-            digest = hashlib.blake2b(rows.tobytes(), digest_size=12).digest()
-            kind = kinds if isinstance(kinds, str) else kinds[name]
-            sigs[name] = (kind, self._version[name], rows.shape[0], digest)
-            factors[name] = sem.mask(bases[name][None], jnp.asarray(rows))
-        msgs = self.sp.messages_memo(sem, factors, jt, sigs, self.cache)
-        out = self.sp.node_factor(sem, factors, jt, jt.root, msgs)
+        with span("engine.grouped", table=table,
+                  kind=kinds if isinstance(kinds, str) else "sk"):
+            for name, keep in keeps.items():
+                k_np = np.asarray(keep)
+                uniform = K == 1 or bool((k_np == k_np[:1]).all())
+                rows = k_np[:1] if uniform else k_np
+                digest = hashlib.blake2b(rows.tobytes(), digest_size=12).digest()
+                kind = kinds if isinstance(kinds, str) else kinds[name]
+                sigs[name] = (kind, self._version[name], rows.shape[0], digest)
+                factors[name] = sem.mask(bases[name][None], jnp.asarray(rows))
+            msgs = self.sp.messages_memo(sem, factors, jt, sigs, self.cache)
+            out = self.sp.node_factor(sem, factors, jt, jt.root, msgs)
         if out.shape[0] != K:
             out = jnp.broadcast_to(out, (K,) + out.shape[1:])
         return out
@@ -328,7 +335,9 @@ class IncrementalBooster:
         subscription, and bases/plans refresh lazily at next query."""
         if isinstance(deltas, TableDelta):
             deltas = [deltas]
-        self.state.apply(deltas)
+        with span("retrain.apply", n_deltas=len(deltas)):
+            self.state.apply(deltas)
+        get_registry().counter("retrain.deltas").inc(len(deltas))
         return self.state.data_version
 
     def live_rows(self, table: str) -> np.ndarray:
@@ -401,16 +410,21 @@ class IncrementalBooster:
         ``max_trees`` budget, the most recent trees are dropped first to
         make room — they encode the finest residual structure, which the
         delta invalidated."""
+        reg = get_registry()
+        t0 = time.perf_counter()
         if deltas is not None:
             self.apply(deltas)
         self.engine.refresh()
         self.booster.refresh_plans()
         c = self.counter
         q0, e0 = c.count, c.edges
-        mse0 = self.ensemble_mse()
+        with span("retrain.drift_check"):
+            mse0 = self.ensemble_mse()
         drift = (float("inf") if self._mse_ref is None
                  else (mse0 - self._mse_ref) / max(self._mse_ref, 1e-12))
+        reg.gauge("retrain.drift").set(0.0 if drift == float("inf") else drift)
         if self.trees and drift <= drift_threshold:
+            reg.counter("retrain.kept").inc()
             return RefitReport(
                 refitted=False, drift=drift, mse_before=mse0, mse_after=mse0,
                 n_new=0, n_trees=len(self.trees),
@@ -420,9 +434,14 @@ class IncrementalBooster:
         if max_trees is not None:
             keep = max(0, max_trees - n_new_trees)
             self.trees = self.trees[:keep]
-        self.trees, self.trace = self.booster.boost(self.trees, n_new_trees)
+        with span("retrain.refit", n_new=n_new_trees, drift=round(drift, 4)
+                  if drift != float("inf") else None):
+            self.trees, self.trace = self.booster.boost(self.trees, n_new_trees)
         mse1 = self.ensemble_mse()
         self._mse_ref = mse1
+        reg.counter("retrain.refits").inc()
+        reg.histogram("retrain.refit_ms").observe((time.perf_counter() - t0) * 1e3)
+        reg.histogram("retrain.refit_edges").observe(c.edges - e0)
         return RefitReport(
             refitted=True, drift=drift, mse_before=mse0, mse_after=mse1,
             n_new=n_new_trees, n_trees=len(self.trees),

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 
 from repro.core import BoostConfig, Booster, materialize_join, predict_rows
 from repro.incremental import IncrementalBooster
+from repro.obs import (
+    enable_tracing, format_summary_table, get_registry, get_tracer,
+)
 from repro.relational import generators
 
 
@@ -75,7 +78,15 @@ def main(argv=None):
                     help="hist = quantile-histogram sweep with "
                          "incrementally maintained bins (core/hist.py)")
     ap.add_argument("--hist-bins", type=int, default=256)
+    ap.add_argument("--trace", metavar="PATH", nargs="?",
+                    const="trace_retrain.json", default=None,
+                    help="record spans (sweep, message emission, plan "
+                         "refresh) and write a Chrome trace loadable in "
+                         "Perfetto, plus PATH.jsonl")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        enable_tracing()
 
     schema = build_schema(args)
     cfg = BoostConfig(n_trees=args.trees, depth=args.depth, mode="sketch",
@@ -118,6 +129,13 @@ def main(argv=None):
           f"{full_edges * args.batches / max(inc_edges_total, 1):.1f}× more)")
     print(f"final model: mse {mse_i:.3f} vs full-refit oracle {mse_f:.3f}; "
           f"message-cache hit rate {ib.engine.cache.hit_rate:.2f}")
+    # one-screen exit summary instead of scrolling back through batches
+    print(format_summary_table(get_registry().snapshot(),
+                               title="retrain_stream metrics"))
+    if args.trace:
+        n = get_tracer().dump_chrome_trace(args.trace)
+        get_tracer().dump_jsonl(args.trace + ".jsonl")
+        print(f"wrote {n} spans to {args.trace} (chrome://tracing / Perfetto)")
     return mse_i, mse_f
 
 

@@ -18,6 +18,10 @@ import time
 import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
+from repro.obs import (
+    enable_tracing, format_summary_table, get_registry, get_tracer,
+    merge_snapshots,
+)
 from repro.relational import generators
 from repro.serving import (
     ModelRegistry, RelationalScoringService, compile_ensemble,
@@ -52,11 +56,13 @@ async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
         await service.score_many(chunk.tolist())
     dt = time.perf_counter() - t0
     qps = n_requests / dt
-    st = service.stats
-    print(f"served {st.requests} requests in {dt:.2f}s → {qps:,.0f} QPS")
-    print(f"batches: {st.batches} (mean size {st.mean_batch:.1f}), "
-          f"cache hits: {st.cache_hits} "
-          f"({100 * st.cache_hits / max(st.requests, 1):.1f}%)")
+    snap = service.stats_snapshot()
+    lat, qw = snap["latency_ms"], snap["queue_wait_ms"]
+    print(f"served {snap['requests']} requests in {dt:.2f}s → {qps:,.0f} QPS")
+    print(f"latency: p50 {lat['p50']:.2f} ms, p99 {lat['p99']:.2f} ms "
+          f"(queue wait p50 {qw['p50']:.2f} / p99 {qw['p99']:.2f} ms)")
+    print(f"batches: {snap['batches']} (mean size {snap['mean_batch']:.1f}), "
+          f"cache hit rate {100 * snap['cache_hit_rate']:.1f}%")
 
     # hot swap: publish a refreshed model mid-traffic (same kernel route
     # and query accounting as v1)
@@ -89,7 +95,13 @@ def main(argv=None):
     ap.add_argument("--zipf", type=float, default=1.3)
     ap.add_argument("--kernel", action="store_true",
                     help="route the segment-⊕ through the Pallas kernel")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record spans and write a Chrome trace "
+                         "(open in Perfetto) plus PATH.jsonl")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        enable_tracing()
 
     schema = build_schema(args)
     trees = train(schema, args)
@@ -110,6 +122,15 @@ def main(argv=None):
                             args.zipf, registry, schema, args, counter))
     print(f"SumProd evaluations for all traffic: {counter.count} "
           f"(seed loop would need {args.trees * 2 ** args.depth + 1} per bulk pass)")
+    # one-screen exit summary: process-wide series ⊎ this service's
+    print(format_summary_table(
+        merge_snapshots(get_registry().snapshot(),
+                        service.stats.registry.snapshot()),
+        title="serve_relational metrics"))
+    if args.trace:
+        n = get_tracer().dump_chrome_trace(args.trace)
+        get_tracer().dump_jsonl(args.trace + ".jsonl")
+        print(f"wrote {n} spans to {args.trace} (chrome://tracing / Perfetto)")
     return qps
 
 

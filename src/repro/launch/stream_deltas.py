@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
 from repro.incremental import MaintainedScorer
+from repro.obs import format_summary_table, get_registry
 from repro.relational import generators
 from repro.serving import ModelRegistry, compile_ensemble
 
@@ -100,6 +101,8 @@ def main(argv=None):
     err = audit(ms, group)
     print(f"final audit vs fresh recompute: max|Δ|={err:.1e} "
           + ("(exact)" if err == 0.0 else "(DRIFT)"))
+    print(format_summary_table(get_registry().snapshot(),
+                               title="stream_deltas metrics"))
     return err
 
 

@@ -1,0 +1,38 @@
+"""Unified observability: tracing spans, named metrics, bench reports.
+
+Zero-dependency (stdlib only; jax touched lazily and optionally).  The
+three pieces every subsystem reports through:
+
+- :mod:`.trace` — nestable ``span("name", **attrs)`` context managers
+  over the SumProd / boosting / serving hot paths, a process
+  :class:`Tracer` with JSONL + Chrome-trace (Perfetto) export,
+  ``jax.profiler`` annotation passthrough, and :func:`fence` for
+  explicit ``block_until_ready`` attribution.  Default-off: disabled
+  spans are a shared no-op context manager.
+- :mod:`.metrics` — a thread-safe :class:`MetricsRegistry` of counters,
+  gauges, and log-bucketed histograms with snapshot/diff/merge
+  semantics; ``QueryCounter``, ``MessageCache``, the serving LRU cache
+  and ``ServiceStats`` all mirror into it as named series.
+- :mod:`.report` — :class:`BenchReport` writes schema-versioned
+  ``BENCH_<name>.json`` artifacts (machine fingerprint, metric
+  snapshots, span rollups) so the perf trajectory is tracked
+  PR-over-PR; ``benchmarks/report.py --check`` gates CI on them.
+"""
+from .metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, diff_snapshots,
+    format_summary_table, get_registry, merge_snapshots, reset_registry,
+)
+from .report import BenchReport, bench_path, fingerprint, validate_bench
+from .trace import (
+    Tracer, disable_tracing, enable_tracing, fence, get_tracer, span,
+    tracing_enabled,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "diff_snapshots", "merge_snapshots", "format_summary_table",
+    "get_registry", "reset_registry",
+    "BenchReport", "bench_path", "fingerprint", "validate_bench",
+    "Tracer", "span", "fence", "enable_tracing", "disable_tracing",
+    "tracing_enabled", "get_tracer",
+]

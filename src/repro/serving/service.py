@@ -19,32 +19,39 @@ nor delta updates can ever resurface a stale cached score.
 from __future__ import annotations
 
 import asyncio
-import dataclasses
 import itertools
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import MetricsRegistry, get_registry, span
 from .compile import CompiledEnsemble
 from .scorer import score_mean_rows
 
 
 class LRUCache:
-    """Bounded (version, row_id) → score cache with hit/miss stats."""
+    """Bounded (version, row_id) → score cache with hit/miss stats,
+    mirrored into the process registry's ``service.lru.*`` series."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._d: "OrderedDict" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        reg = get_registry()
+        self._g_hits = reg.counter("service.lru.hits")
+        self._g_misses = reg.counter("service.lru.misses")
 
     def get(self, key):
         if self.capacity <= 0 or key not in self._d:
             self.misses += 1
+            self._g_misses.inc()
             return None
         self._d.move_to_end(key)
         self.hits += 1
+        self._g_hits.inc()
         return self._d[key]
 
     def put(self, key, value):
@@ -108,25 +115,79 @@ class ModelRegistry:
         return self._stacked_cache[1]
 
 
-@dataclasses.dataclass
 class ServiceStats:
-    requests: int = 0
-    batches: int = 0
-    batched_rows: int = 0
-    cache_hits: int = 0
+    """Service accounting as named metric series (thread-safe), keeping
+    the old attribute surface (``requests``/``batches``/``batched_rows``
+    /``cache_hits``/``mean_batch``) as read-only views.
+
+    Beyond the seed counters it records the TIMINGS the seed never did:
+    per-request queue wait (enqueue → batch pickup), end-to-end latency
+    (``score`` entry → resolved future, cache hits included), per-batch
+    execute time, and the coalesced batch-size distribution — all as
+    log-bucketed histograms with p50/p90/p99 summaries.  Each service
+    owns its registry so co-hosted services never mix their series.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._requests = r.counter("service.requests")
+        self._batches = r.counter("service.batches")
+        self._batched_rows = r.counter("service.batched_rows")
+        self._cache_hits = r.counter("service.cache_hits")
+        self.queue_wait_ms = r.histogram("service.queue_wait_ms")
+        self.latency_ms = r.histogram("service.latency_ms")
+        self.batch_exec_ms = r.histogram("service.batch_exec_ms")
+        self.batch_size = r.histogram("service.batch_size")
+
+    @property
+    def requests(self) -> int:
+        return self._requests.value
+
+    @property
+    def batches(self) -> int:
+        return self._batches.value
+
+    @property
+    def batched_rows(self) -> int:
+        return self._batched_rows.value
+
+    @property
+    def cache_hits(self) -> int:
+        return self._cache_hits.value
 
     @property
     def mean_batch(self) -> float:
         return self.batched_rows / max(self.batches, 1)
 
+    def snapshot(self) -> dict:
+        """p50/p99 summary dict (see
+        :meth:`RelationalScoringService.stats_snapshot`)."""
+        def q(h):
+            s = h.summary()
+            return {k: s[k] for k in ("count", "mean", "p50", "p90", "p99", "max")}
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hits / max(self.requests, 1),
+            "mean_batch": self.mean_batch,
+            "queue_wait_ms": q(self.queue_wait_ms),
+            "latency_ms": q(self.latency_ms),
+            "batch_exec_ms": q(self.batch_exec_ms),
+            "batch_size": q(self.batch_size),
+        }
+
 
 class _Request:
-    __slots__ = ("row_id", "version", "future")
+    __slots__ = ("row_id", "version", "future", "t_enq")
 
-    def __init__(self, row_id: int, version: int, future: "asyncio.Future"):
+    def __init__(self, row_id: int, version: int, future: "asyncio.Future",
+                 t_enq: float):
         self.row_id = row_id
         self.version = version
         self.future = future
+        self.t_enq = t_enq
 
 
 class RelationalScoringService:
@@ -148,6 +209,13 @@ class RelationalScoringService:
         self.stats = ServiceStats()
         self._q: "asyncio.Queue" = asyncio.Queue()
         self._task: Optional["asyncio.Task"] = None
+
+    # ---------------------------------------------------------------- stats --
+    def stats_snapshot(self) -> dict:
+        """Point-in-time service telemetry: request/batch/cache counts
+        plus p50/p90/p99 of queue wait, end-to-end latency, batch
+        execute time, and the batch-size distribution."""
+        return self.stats.snapshot()
 
     # -------------------------------------------------------------- control --
     async def start(self):
@@ -171,6 +239,7 @@ class RelationalScoringService:
         """Mean prediction Σŷ/count for one row of ``group_by``."""
         if self._task is None or self._task.done():
             raise RuntimeError("service not running — call start() first")
+        t0 = time.perf_counter()
         v, ens = self.registry.get(version)
         # validate per request (a bad id inside a coalesced batch must not
         # fail its co-batched neighbours); rejected requests don't count
@@ -179,17 +248,21 @@ class RelationalScoringService:
             raise IndexError(
                 f"row id {row_id} out of range for table {self.group_by!r} (n_rows={n})"
             )
-        self.stats.requests += 1
+        self.stats._requests.inc()
         # cache key includes the model's data_version: delta maintenance
         # mutates a published MaintainedScorer in place, and a stale hit
         # across that bump would serve pre-delta scores
         cached = self.cache.get((v, getattr(ens, "data_version", 0), row_id))
         if cached is not None:
-            self.stats.cache_hits += 1
+            self.stats._cache_hits.inc()
+            self.stats.latency_ms.observe((time.perf_counter() - t0) * 1e3)
             return cached
         fut = asyncio.get_running_loop().create_future()
-        await self._q.put(_Request(int(row_id), v, fut))
-        return await fut
+        await self._q.put(_Request(int(row_id), v, fut, t0))
+        try:
+            return await fut
+        finally:
+            self.stats.latency_ms.observe((time.perf_counter() - t0) * 1e3)
 
     async def score_many(self, row_ids, version: Optional[int] = None) -> List[float]:
         return list(await asyncio.gather(
@@ -224,21 +297,30 @@ class RelationalScoringService:
         return batch
 
     def _dispatch(self, batch: List[_Request]):
+        st = self.stats
+        t_pick = time.perf_counter()
+        for r in batch:                      # enqueue → batch pickup
+            st.queue_wait_ms.observe((t_pick - r.t_enq) * 1e3)
         by_version: Dict[int, List[_Request]] = {}
         for r in batch:
             by_version.setdefault(r.version, []).append(r)
-        for v, reqs in by_version.items():
-            _, ens = self.registry.get(v)
-            dv = getattr(ens, "data_version", 0)
-            ids = np.asarray([r.row_id for r in reqs], np.int32)
-            mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
-            for r, m in zip(reqs, mean):
-                val = float(m)
-                self.cache.put((v, dv, r.row_id), val)
-                if not r.future.done():
-                    r.future.set_result(val)
-        self.stats.batches += 1
-        self.stats.batched_rows += len(batch)
+        with span("service.batch", size=len(batch),
+                  versions=len(by_version)):
+            for v, reqs in by_version.items():
+                _, ens = self.registry.get(v)
+                dv = getattr(ens, "data_version", 0)
+                ids = np.asarray([r.row_id for r in reqs], np.int32)
+                t_exec = time.perf_counter()
+                mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
+                st.batch_exec_ms.observe((time.perf_counter() - t_exec) * 1e3)
+                for r, m in zip(reqs, mean):
+                    val = float(m)
+                    self.cache.put((v, dv, r.row_id), val)
+                    if not r.future.done():
+                        r.future.set_result(val)
+        st._batches.inc()
+        st._batched_rows.inc(len(batch))
+        st.batch_size.observe(len(batch))
 
     async def _run(self):
         while True:
