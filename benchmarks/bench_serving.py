@@ -7,6 +7,13 @@ scorer, plus micro-batching service throughput.
       join oracle.
   S2  micro-batching service QPS under zipf-skewed interactive traffic
       (batch coalescing + LRU cache), measured end to end.
+  S3  open-loop mixed delta+query workload under SLO burn-rate
+      monitoring: interleaved table deltas and scoring chunks with a
+      healthy-phase compliance measurement, then an injected dispatch
+      latency spike that must flip the burn-rate state off healthy AND
+      trigger a flight-recorder dump (validated as a loadable Chrome
+      trace).  The SLO summary fields land in BENCH_serving.json so
+      report.py --check gates on them.
 
     PYTHONPATH=src python benchmarks/bench_serving.py
 """
@@ -14,6 +21,8 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import json
+import os
 import time
 
 import jax
@@ -23,8 +32,10 @@ import numpy as np
 from repro.core import (
     BoostConfig, Booster, QueryCounter, materialize_join, predict_rows,
 )
-from _common import emit
-from repro.relational.generators import star_schema
+from _common import REPO_ROOT, emit
+from repro.incremental import MaintainedScorer
+from repro.obs import FlightRecorder, SLOMonitor, get_tracer, parse_slo_spec
+from repro.relational.generators import delta_stream, star_schema
 from repro.serving import (
     ModelRegistry, RelationalScoringService, compile_ensemble,
     score_grouped, score_grouped_reference,
@@ -113,12 +124,95 @@ def s2_service_qps(sch, trees, n_requests=2000, max_batch=64, max_wait_ms=1.0,
     }]
 
 
+def s3_slo_mixed_workload(sch, trees, n_clean=8, n_spike=4, chunk=64,
+                          spike_sleep_s=0.6):
+    """Open-loop mixed delta+query run with SLO monitoring.
+
+    Clean phase: interleave delta batches (MaintainedScorer.apply) with
+    score_many chunks and measure latency compliance.  Spike phase: wrap
+    the service's dispatch in a sleep so every request blows the latency
+    objective — the burn-rate state must leave ``healthy`` and the
+    flight recorder must dump a valid Chrome trace.
+    """
+    out_dir = os.environ.get("REPRO_BENCH_DIR") or REPO_ROOT
+    tracer = get_tracer()
+    was_enabled = tracer.enabled          # REPRO_TRACE=1 in CI
+    slo = SLOMonitor(parse_slo_spec("latency=300ms@0.9,errors=0.05,staleness=10s"),
+                     fast_window_s=2.0, slow_window_s=8.0)
+    flight = FlightRecorder(capacity=2048, out_dir=out_dir, name="serving",
+                            latency_trigger_ms=450.0, cooldown_s=0.3).start()
+    registry = ModelRegistry()
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    registry.publish(ms)
+    # shed_when_unhealthy off: the bench drives PAST the SLO on purpose
+    # and wants latencies, not ServiceOverloadedError, from the far side
+    service = RelationalScoringService(
+        registry, "fact", max_batch=chunk, max_wait_ms=0.5, cache_size=256,
+        flight=flight, shed_when_unhealthy=False,
+    )
+    n_rows = sch.table("fact").n_rows
+    rng = np.random.default_rng(5)
+    deltas = list(delta_stream(sch, ms.live_rows, seed=11,
+                               n_batches=n_clean, ops_per_batch=4))
+
+    async def run():
+        await service.start()
+        # warm the jit + message cache before the SLO clock starts
+        await service.score_many(rng.integers(0, n_rows, chunk).tolist())
+        service.slo = slo
+        max_stale = 0.0
+        for batch in deltas:              # clean phase: deltas + queries
+            ms.apply(batch)
+            max_stale = max(max_stale, ms.staleness_s())
+            ids = np.minimum(rng.zipf(1.3, chunk) - 1, n_rows - 1)
+            await service.score_many(ids.tolist())
+        clean_state = slo.state()
+        clean_compliance = slo.compliance("latency")
+        # spike phase: every dispatch stalls past the latency objective
+        orig = service._dispatch
+        service._dispatch = lambda b: (time.sleep(spike_sleep_s), orig(b))[1]
+        for _ in range(n_spike):
+            ids = rng.integers(0, n_rows, chunk)
+            await service.score_many(ids.tolist())
+        service._dispatch = orig
+        spike_state = slo.state()
+        await service.stop()
+        return clean_state, clean_compliance, spike_state, max_stale
+
+    clean_state, clean_compliance, spike_state, max_stale = asyncio.run(run())
+    flight.stop()
+    if was_enabled:
+        tracer.enabled = True             # keep the CI TRACE dump alive
+
+    dumps = [d for d in flight.status()["dumps"] if d["path"]]
+    assert spike_state != "healthy", (
+        f"latency spike did not move the burn-rate state: {spike_state}")
+    assert dumps, "latency spike did not trigger a flight dump"
+    with open(dumps[0]["path"]) as f:     # must load as a Chrome trace
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    triggers = [e for e in events if e.get("name") == "flight.trigger"]
+    assert triggers and triggers[0]["ph"] == "i", "dump lacks trigger marker"
+    snap = service.stats_snapshot()
+    return [{
+        "bench": "S3", "deltas": len(deltas), "requests": snap["requests"],
+        "clean_state": clean_state,
+        "clean_latency_compliance": round(clean_compliance, 4),
+        "max_staleness_s": round(max_stale, 4),
+        "spike_state": spike_state,
+        "flight_dumps": len(dumps), "flight_events": len(events),
+        "errors": snap["errors"], "shed": snap["shed"],
+    }]
+
+
 def run_all(fast: bool = True):
     rows, sch, trees = s1_one_pass_vs_leaf_loop(
         n_fact=1000 if fast else 4000, n_trees=4 if fast else 6,
         depth=3,
     )
     rows += s2_service_qps(sch, trees, n_requests=1000 if fast else 5000)
+    rows += s3_slo_mixed_workload(sch, trees, n_clean=6 if fast else 10,
+                                  n_spike=4 if fast else 6)
     return rows
 
 
@@ -131,11 +225,15 @@ def main(argv=None):
         print(r)
     s1 = next(r for r in rows if r["bench"] == "S1")
     s2 = next(r for r in rows if r["bench"] == "S2")
+    s3 = next(r for r in rows if r["bench"] == "S3")
     emit("serving", rows, {
         "eval_ratio": s1["eval_ratio"],
         "qps": s2["qps"],
         "cache_hit_pct": s2["cache_hit_pct"],
         "latency_ms_p99": s2["latency_ms_p99"],
+        "slo_latency_compliance": s3["clean_latency_compliance"],
+        "slo_spike_detected": 1.0 if (s3["spike_state"] != "healthy"
+                                      and s3["flight_dumps"] > 0) else 0.0,
     }, config={"full": args.full})
     return rows
 

@@ -95,6 +95,10 @@ class MaintainedScorer:
         self._msgs: Dict[str, List[jnp.ndarray]] = {}
         self._dirty: Dict[str, Set[int]] = {}
         self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        # wall-clock instant of the oldest applied-but-unrefreshed delta
+        # (None = the served view is fully caught up) — the data-staleness
+        # signal the SLO monitor burns against
+        self._stale_since: Optional[float] = None
 
     # ------------------------------------------------------------- queries --
     def n_rows(self, table: str) -> int:
@@ -142,10 +146,22 @@ class MaintainedScorer:
                         self._dirty.setdefault(root, set()).add(ti)
         self._grouped.clear()
         self.data_version += 1
+        if self._stale_since is None:
+            self._stale_since = time.perf_counter()
         reg = get_registry()
         reg.counter("ivm.deltas").inc(len(deltas))
         reg.histogram("ivm.apply_ms").observe((time.perf_counter() - t0) * 1e3)
         return self.data_version
+
+    def staleness_s(self) -> float:
+        """Wall-clock lag of the served view behind applied deltas: 0.0
+        when every cached message/grouped score reflects the current
+        ``data_version``, else seconds since the oldest unrefreshed
+        delta landed.  The serving batcher mirrors this into its
+        ``service.staleness_s`` gauge and the SLO staleness objective."""
+        if self._stale_since is None:
+            return 0.0
+        return max(0.0, time.perf_counter() - self._stale_since)
 
     def _refresh_factor_rows(self, table: str, slots: np.ndarray):
         """Re-evaluate the stacked leaf masks for ``slots`` and scatter
@@ -236,6 +252,14 @@ class MaintainedScorer:
             get_registry().histogram("ivm.refresh_ms").observe(
                 (time.perf_counter() - t0) * 1e3)
         self._dirty[group_by] = set()
+        # all roots caught up → the served view is fresh again; record
+        # how long the resolved deltas sat unserved (the delta lag)
+        if self._stale_since is not None and not any(self._dirty.values()):
+            reg = get_registry()
+            reg.histogram("ivm.refresh_lag_s").observe(
+                time.perf_counter() - self._stale_since)
+            reg.gauge("ivm.staleness_s").set(0.0)
+            self._stale_since = None
         return sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by])
 
     def score_grouped(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.core import BoostConfig, Booster, materialize_join, predict_rows
 from repro.incremental import IncrementalBooster
 from repro.obs import (
+    FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
     enable_tracing, format_summary_table, get_registry, get_tracer,
+    parse_slo_spec,
 )
 from repro.relational import generators
 
@@ -83,6 +85,19 @@ def main(argv=None):
                     help="record spans (sweep, message emission, plan "
                          "refresh) and write a Chrome trace loadable in "
                          "Perfetto, plus PATH.jsonl")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metricsz /healthz /statusz /tracez on this "
+                         "port (0 = ephemeral) while the stream runs")
+    ap.add_argument("--slo", metavar="SPEC", default=None,
+                    help="e.g. 'latency=500ms@0.95,staleness=10s' — per-batch "
+                         "refit latency + delta-staleness burn rates")
+    ap.add_argument("--flight", type=int, default=None, metavar="N",
+                    help="flight-recorder ring of the last N spans with "
+                         "latency-triggered FLIGHT_retrain_*.json dumps")
+    ap.add_argument("--flight-latency-ms", type=float, default=None)
+    ap.add_argument("--sample", metavar="PATH", default=None,
+                    help="append periodic metric-snapshot deltas to this JSONL")
+    ap.add_argument("--sample-interval", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -100,6 +115,34 @@ def main(argv=None):
           f"{ib.counter.edges} segment-⊕ edges "
           f"(cache hit rate {ib.engine.cache.hit_rate:.2f})")
 
+    slo = (SLOMonitor(parse_slo_spec(args.slo),
+                      fast_window_s=5.0, slow_window_s=30.0)
+           if args.slo else None)
+    flight = None
+    if args.flight:
+        flight = FlightRecorder(
+            capacity=args.flight, name="retrain",
+            latency_trigger_ms=args.flight_latency_ms, cooldown_s=5.0,
+        ).start()
+    telemetry = None
+    if args.metrics_port is not None:
+        telemetry = TelemetryServer(
+            slo=slo, flight=flight, port=args.metrics_port,
+            status_fn=lambda: {"n_trees": len(ib.trees),
+                               "staleness_s": ib.staleness_s()},
+        )
+        telemetry.start_in_thread()
+        print(f"telemetry: {telemetry.url('/metricsz')}  "
+              f"{telemetry.url('/healthz')}")
+    sampler = None
+    if args.sample:
+        sampler = PeriodicSampler(
+            args.sample, interval_s=args.sample_interval,
+            extra_fn=lambda: {"n_trees": len(ib.trees),
+                              "staleness_s": ib.staleness_s(),
+                              "slo_state": slo.state() if slo else None},
+        ).start()
+
     stream = generators.drift_stream(
         schema, ib.live_rows, seed=args.seed + 1,
         n_batches=args.batches, rows_per_batch=args.rows_per_batch,
@@ -112,6 +155,12 @@ def main(argv=None):
                        max_trees=args.max_trees)
         dt = (time.perf_counter() - t0) * 1e3
         inc_edges_total += rep.edges
+        if slo is not None:
+            slo.record_latency(dt)
+            slo.record_request(error=False)
+            slo.set_staleness(ib.staleness_s())
+        if flight is not None:
+            flight.observe_latency(dt, batch=bi, refitted=rep.refitted)
         action = (f"+{rep.n_new} trees → {rep.n_trees}" if rep.refitted
                   else "kept model")
         note = ""
@@ -129,6 +178,21 @@ def main(argv=None):
           f"{full_edges * args.batches / max(inc_edges_total, 1):.1f}× more)")
     print(f"final model: mse {mse_i:.3f} vs full-refit oracle {mse_f:.3f}; "
           f"message-cache hit rate {ib.engine.cache.hit_rate:.2f}")
+    if slo is not None:
+        rep = slo.evaluate()
+        print(f"SLO state: {rep['state']}  "
+              + "  ".join(f"{n}: burn {o['burn_fast']:.2f} [{o['state']}]"
+                          for n, o in rep["objectives"].items()))
+    if sampler is not None:
+        sampler.stop()
+        print(f"wrote {sampler.samples} telemetry samples to {args.sample}")
+    if telemetry is not None:
+        telemetry.stop_thread()
+    if flight is not None:
+        flight.stop()
+        st = flight.status()
+        print(f"flight recorder: {st['buffered']} spans buffered, "
+              f"{len(st['dumps'])} dump(s)")
     # one-screen exit summary instead of scrolling back through batches
     print(format_summary_table(get_registry().snapshot(),
                                title="retrain_stream metrics"))

@@ -19,12 +19,14 @@ import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
 from repro.obs import (
+    FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
     enable_tracing, format_summary_table, get_registry, get_tracer,
-    merge_snapshots,
+    merge_snapshots, parse_slo_spec,
 )
 from repro.relational import generators
 from repro.serving import (
-    ModelRegistry, RelationalScoringService, compile_ensemble,
+    ModelRegistry, RelationalScoringService, ServiceOverloadedError,
+    compile_ensemble,
 )
 
 
@@ -47,15 +49,33 @@ def train(schema, args, seed=0):
 
 
 async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
-                schema, args, counter):
+                schema, args, counter, telemetry=None):
     rng = np.random.default_rng(1)
     ids = np.minimum(rng.zipf(zipf_a, n_requests) - 1, n_rows - 1)
     await service.start()
+    if telemetry is not None:
+        await telemetry.start()
+        print(f"telemetry: {telemetry.url('/metricsz')}  "
+              f"{telemetry.url('/healthz')}  {telemetry.url('/statusz')}  "
+              f"{telemetry.url('/tracez')}")
+    # jit warmup outside the SLO clock: the first batch pays compile
+    # time, which would read as an instant budget burn and trip the
+    # shedder before any real traffic
+    saved_slo, service.slo = service.slo, None
+    await service.score_many(ids[:64].tolist())
+    service.slo = saved_slo
+    shed_chunks = 0
     t0 = time.perf_counter()
     for chunk in np.array_split(ids, max(1, n_requests // concurrency)):
-        await service.score_many(chunk.tolist())
+        try:
+            await service.score_many(chunk.tolist())
+        except ServiceOverloadedError:   # open loop: shed work is dropped
+            shed_chunks += 1
     dt = time.perf_counter() - t0
     qps = n_requests / dt
+    if shed_chunks:
+        print(f"admission control shed {shed_chunks} chunk(s) "
+              f"({service.stats.shed} requests) while unhealthy")
     snap = service.stats_snapshot()
     lat, qw = snap["latency_ms"], snap["queue_wait_ms"]
     print(f"served {snap['requests']} requests in {dt:.2f}s → {qps:,.0f} QPS")
@@ -71,9 +91,21 @@ async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
         use_kernel=args.kernel, counter=counter,
     ))
     more = rng.integers(0, n_rows, 64)
-    out = await service.score_many(more.tolist())
-    print(f"hot-swapped to version {v2}; {len(out)} post-swap requests OK "
-          f"(sample score {out[0]:+.3f})")
+    try:
+        out = await service.score_many(more.tolist())
+        print(f"hot-swapped to version {v2}; {len(out)} post-swap requests OK "
+              f"(sample score {out[0]:+.3f})")
+    except ServiceOverloadedError:
+        print(f"hot-swapped to version {v2}; post-swap requests shed "
+              f"(SLO state unhealthy)")
+    if service.slo is not None:
+        rep = service.slo.evaluate()
+        objs = "  ".join(
+            f"{n}: burn {o['burn_fast']:.2f}/{o['burn_slow']:.2f} [{o['state']}]"
+            for n, o in rep["objectives"].items())
+        print(f"SLO state: {rep['state']}  ({objs})")
+    if telemetry is not None:
+        await telemetry.stop()
     await service.stop()
     return qps
 
@@ -98,6 +130,23 @@ def main(argv=None):
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record spans and write a Chrome trace "
                          "(open in Perfetto) plus PATH.jsonl")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metricsz /healthz /statusz /tracez on this "
+                         "port (0 = ephemeral, printed on start)")
+    ap.add_argument("--slo", metavar="SPEC", default=None,
+                    help="SLO objectives, e.g. "
+                         "'latency=50ms@0.99,errors=0.01,staleness=5s' — "
+                         "burn-rate state feeds /healthz and admission control")
+    ap.add_argument("--flight", type=int, default=None, metavar="N",
+                    help="always-on flight recorder keeping the last N spans "
+                         "(O(1) memory ring; dumps FLIGHT_serve_*.json)")
+    ap.add_argument("--flight-latency-ms", type=float, default=None,
+                    help="dump the flight ring when a request exceeds this "
+                         "latency (requires --flight)")
+    ap.add_argument("--sample", metavar="PATH", default=None,
+                    help="append periodic metric-snapshot deltas to this "
+                         "JSONL time series")
+    ap.add_argument("--sample-interval", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -111,15 +160,53 @@ def main(argv=None):
     print(f"compiled ensemble: {ens.n_trees} trees, {ens.total_leaves} stacked "
           f"leaves over {schema.n_tables} tables (group_by={group})")
 
+    slo = None
+    if args.slo:
+        slo = SLOMonitor(parse_slo_spec(args.slo),
+                         fast_window_s=5.0, slow_window_s=30.0)
+    flight = None
+    if args.flight:
+        flight = FlightRecorder(
+            capacity=args.flight, name="serve",
+            latency_trigger_ms=args.flight_latency_ms, cooldown_s=5.0,
+        ).start()
+
     registry = ModelRegistry()
     v1 = registry.publish(ens)
     service = RelationalScoringService(
         registry, group, max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms, cache_size=args.cache_size,
+        slo=slo, flight=flight,
     )
+    telemetry = None
+    if args.metrics_port is not None:
+        telemetry = TelemetryServer(
+            registries=[get_registry(), service.stats.registry],
+            slo=slo, flight=flight, port=args.metrics_port,
+            status_fn=lambda: {
+                "model_version": registry.latest_version(),
+                "stats": service.stats_snapshot(),
+            },
+        )
+    sampler = None
+    if args.sample:
+        sampler = PeriodicSampler(
+            args.sample, interval_s=args.sample_interval,
+            registries=[get_registry(), service.stats.registry],
+            extra_fn=lambda: {"slo_state": slo.state() if slo else None},
+        ).start()
     n_rows = schema.table(group).n_rows
     qps = asyncio.run(drive(service, n_rows, args.requests, args.concurrency,
-                            args.zipf, registry, schema, args, counter))
+                            args.zipf, registry, schema, args, counter,
+                            telemetry=telemetry))
+    if sampler is not None:
+        sampler.stop()
+        print(f"wrote {sampler.samples} telemetry samples to {args.sample}")
+    if flight is not None:
+        flight.stop()
+        st = flight.status()
+        print(f"flight recorder: {st['buffered']} spans buffered, "
+              f"{len(st['dumps'])} dump(s), {st['suppressed']} suppressed")
     print(f"SumProd evaluations for all traffic: {counter.count} "
           f"(seed loop would need {args.trees * 2 ** args.depth + 1} per bulk pass)")
     # one-screen exit summary: process-wide series ⊎ this service's

@@ -20,7 +20,10 @@ import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
 from repro.incremental import MaintainedScorer
-from repro.obs import format_summary_table, get_registry
+from repro.obs import (
+    FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
+    format_summary_table, get_registry, parse_slo_spec,
+)
 from repro.relational import generators
 from repro.serving import ModelRegistry, compile_ensemble
 
@@ -58,6 +61,19 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--ops", type=int, default=8)
     ap.add_argument("--audit-every", type=int, default=4)
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metricsz /healthz /statusz /tracez on this "
+                         "port (0 = ephemeral) for the duration of the stream")
+    ap.add_argument("--slo", metavar="SPEC", default=None,
+                    help="e.g. 'latency=100ms@0.99,staleness=2s' — per-batch "
+                         "maintenance latency + served-data staleness")
+    ap.add_argument("--flight", type=int, default=None, metavar="N",
+                    help="flight-recorder ring of the last N spans with "
+                         "latency-triggered FLIGHT_deltas_*.json dumps")
+    ap.add_argument("--flight-latency-ms", type=float, default=None)
+    ap.add_argument("--sample", metavar="PATH", default=None,
+                    help="append periodic metric-snapshot deltas to this JSONL")
+    ap.add_argument("--sample-interval", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     schema = build_schema(args)
@@ -75,6 +91,34 @@ def main(argv=None):
     print(f"published v{v}: {ms.total_leaves} stacked leaves, "
           f"{schema.n_tables} tables; full pass = {full_edges} segment-⊕ edges")
 
+    slo = (SLOMonitor(parse_slo_spec(args.slo),
+                      fast_window_s=5.0, slow_window_s=30.0)
+           if args.slo else None)
+    flight = None
+    if args.flight:
+        flight = FlightRecorder(
+            capacity=args.flight, name="deltas",
+            latency_trigger_ms=args.flight_latency_ms, cooldown_s=5.0,
+        ).start()
+    telemetry = None
+    if args.metrics_port is not None:
+        telemetry = TelemetryServer(
+            slo=slo, flight=flight, port=args.metrics_port,
+            status_fn=lambda: {"data_version": ms.data_version,
+                               "staleness_s": ms.staleness_s()},
+        )
+        telemetry.start_in_thread()
+        print(f"telemetry: {telemetry.url('/metricsz')}  "
+              f"{telemetry.url('/healthz')}")
+    sampler = None
+    if args.sample:
+        sampler = PeriodicSampler(
+            args.sample, interval_s=args.sample_interval,
+            extra_fn=lambda: {"data_version": ms.data_version,
+                              "staleness_s": ms.staleness_s(),
+                              "slo_state": slo.state() if slo else None},
+        ).start()
+
     stream = generators.delta_stream(
         schema, ms.live_rows, seed=args.seed + 1,
         n_batches=args.batches, ops_per_batch=args.ops,
@@ -84,8 +128,16 @@ def main(argv=None):
         e0 = counter.edges
         t0 = time.perf_counter()
         dv = ms.apply(batch)
+        if slo is not None:
+            slo.set_staleness(ms.staleness_s())   # applied, not yet served
         ms.grouped_cached(group)                  # path-restricted refresh
         lat.append((time.perf_counter() - t0) * 1e3)
+        if slo is not None:
+            slo.record_latency(lat[-1])
+            slo.record_request(error=False)
+            slo.set_staleness(ms.staleness_s())   # refreshed → 0 again
+        if flight is not None:
+            flight.observe_latency(lat[-1], batch=bi)
         inc_edges += counter.edges - e0
         ops = sum(d.n_ops for d in batch)
         note = ""
@@ -101,6 +153,21 @@ def main(argv=None):
     err = audit(ms, group)
     print(f"final audit vs fresh recompute: max|Δ|={err:.1e} "
           + ("(exact)" if err == 0.0 else "(DRIFT)"))
+    if slo is not None:
+        rep = slo.evaluate()
+        print(f"SLO state: {rep['state']}  "
+              + "  ".join(f"{n}: burn {o['burn_fast']:.2f} [{o['state']}]"
+                          for n, o in rep["objectives"].items()))
+    if sampler is not None:
+        sampler.stop()
+        print(f"wrote {sampler.samples} telemetry samples to {args.sample}")
+    if telemetry is not None:
+        telemetry.stop_thread()
+    if flight is not None:
+        flight.stop()
+        st = flight.status()
+        print(f"flight recorder: {st['buffered']} spans buffered, "
+              f"{len(st['dumps'])} dump(s)")
     print(format_summary_table(get_registry().snapshot(),
                                title="stream_deltas metrics"))
     return err

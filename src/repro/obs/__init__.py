@@ -17,12 +17,31 @@ three pieces every subsystem reports through:
   ``BENCH_<name>.json`` artifacts (machine fingerprint, metric
   snapshots, span rollups) so the perf trajectory is tracked
   PR-over-PR; ``benchmarks/report.py --check`` gates CI on them.
+
+Live telemetry (this layer observing a RUNNING system, not just a
+finished one):
+
+- :mod:`.flight` — :class:`FlightRecorder`: always-on ring-buffer
+  tracing (O(1) memory) with latency/error-triggered Perfetto dumps;
+- :mod:`.exposition` — Prometheus/JSON rendering of any registry
+  snapshot, the :class:`TelemetryServer` HTTP endpoints
+  (``/metricsz`` ``/healthz`` ``/statusz`` ``/tracez``), and the
+  :class:`PeriodicSampler` JSONL time series;
+- :mod:`.slo` — declarative :class:`SLOObjective`s evaluated by an
+  :class:`SLOMonitor` with multi-window burn rates into a
+  healthy/degraded/unhealthy state the service consumes as an
+  overload signal.
 """
+from .exposition import (
+    PeriodicSampler, TelemetryServer, render_json, render_prometheus,
+)
+from .flight import FlightRecorder
 from .metrics import (
     Counter, Gauge, Histogram, MetricsRegistry, diff_snapshots,
     format_summary_table, get_registry, merge_snapshots, reset_registry,
 )
 from .report import BenchReport, bench_path, fingerprint, validate_bench
+from .slo import SLOMonitor, SLOObjective, parse_slo_spec
 from .trace import (
     Tracer, disable_tracing, enable_tracing, fence, get_tracer, span,
     tracing_enabled,
@@ -35,4 +54,7 @@ __all__ = [
     "BenchReport", "bench_path", "fingerprint", "validate_bench",
     "Tracer", "span", "fence", "enable_tracing", "disable_tracing",
     "tracing_enabled", "get_tracer",
+    "FlightRecorder",
+    "TelemetryServer", "PeriodicSampler", "render_prometheus", "render_json",
+    "SLOMonitor", "SLOObjective", "parse_slo_spec",
 ]

@@ -28,6 +28,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 __all__ = [
@@ -55,6 +56,10 @@ class Tracer:
         self.events: List[dict] = []
         self._lock = threading.Lock()
         self._tls = threading.local()
+        # every thread's span stack, so clear() can reset them all — a
+        # span leaked across an enable/disable cycle must not skew the
+        # recorded depth of every later span on that thread
+        self._stacks: List[list] = []
         self._t0 = time.perf_counter()
 
     # ------------------------------------------------------------ recording --
@@ -62,6 +67,8 @@ class Tracer:
         st = getattr(self._tls, "stack", None)
         if st is None:
             st = self._tls.stack = []
+            with self._lock:
+                self._stacks.append(st)
         return st
 
     def record(self, ev: dict) -> None:
@@ -71,7 +78,29 @@ class Tracer:
     def clear(self) -> None:
         with self._lock:
             self.events.clear()
+            for st in self._stacks:
+                del st[:]
         self._t0 = time.perf_counter()
+
+    # --------------------------------------------------------- ring buffer --
+    @property
+    def ring_capacity(self) -> Optional[int]:
+        """Flight-recorder capacity, or None when unbounded."""
+        return self.events.maxlen if isinstance(self.events, deque) else None
+
+    def set_ring(self, capacity: int) -> None:
+        """Flight-recorder mode: keep only the newest ``capacity`` events
+        (overwrite-oldest, O(1) per span) — always-on tracing with bounded
+        memory instead of the enable-dump-disable workflow."""
+        if capacity <= 0:
+            raise ValueError(f"ring capacity must be positive, got {capacity}")
+        with self._lock:
+            self.events = deque(self.events, maxlen=capacity)
+
+    def set_unbounded(self) -> None:
+        """Back to the unbounded list sink (full-trace capture mode)."""
+        with self._lock:
+            self.events = list(self.events)
 
     # ------------------------------------------------------------- rollups --
     def rollup(self) -> Dict[str, dict]:

@@ -16,12 +16,16 @@ from .scorer import (
     score_mean_rows,
     score_rows,
 )
-from .service import LRUCache, ModelRegistry, RelationalScoringService, ServiceStats
+from .service import (
+    LRUCache, ModelRegistry, RelationalScoringService, ServiceOverloadedError,
+    ServiceStats,
+)
 
 __all__ = [
     "CompiledEnsemble", "KernelChannels", "compile_ensemble", "stack_table_factor",
     "StackedEnsembles", "stack_ensembles",
     "score_fresh", "score_grouped", "score_grouped_reference",
     "score_mean_rows", "score_rows",
-    "LRUCache", "ModelRegistry", "RelationalScoringService", "ServiceStats",
+    "LRUCache", "ModelRegistry", "RelationalScoringService",
+    "ServiceOverloadedError", "ServiceStats",
 ]

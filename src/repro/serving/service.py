@@ -31,16 +31,23 @@ from .compile import CompiledEnsemble
 from .scorer import score_mean_rows
 
 
+class ServiceOverloadedError(RuntimeError):
+    """Raised when admission control sheds a request (SLO unhealthy)."""
+
+
 class LRUCache:
     """Bounded (version, row_id) → score cache with hit/miss stats,
-    mirrored into the process registry's ``service.lru.*`` series."""
+    mirrored into ``registry``'s ``service.lru.*`` series.  The owning
+    service passes its OWN per-service registry — co-hosted services
+    must not mix their hit/miss series (the process-global registry is
+    only the fallback for standalone caches)."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, registry: Optional[MetricsRegistry] = None):
         self.capacity = capacity
         self._d: "OrderedDict" = OrderedDict()
         self.hits = 0
         self.misses = 0
-        reg = get_registry()
+        reg = registry if registry is not None else get_registry()
         self._g_hits = reg.counter("service.lru.hits")
         self._g_misses = reg.counter("service.lru.misses")
 
@@ -135,6 +142,10 @@ class ServiceStats:
         self._batches = r.counter("service.batches")
         self._batched_rows = r.counter("service.batched_rows")
         self._cache_hits = r.counter("service.cache_hits")
+        self._rejected = r.counter("service.rejected")   # bad row ids
+        self._errors = r.counter("service.errors")       # dispatch failures
+        self._shed = r.counter("service.shed")           # admission control
+        self.staleness_s = r.gauge("service.staleness_s")
         self.queue_wait_ms = r.histogram("service.queue_wait_ms")
         self.latency_ms = r.histogram("service.latency_ms")
         self.batch_exec_ms = r.histogram("service.batch_exec_ms")
@@ -157,6 +168,18 @@ class ServiceStats:
         return self._cache_hits.value
 
     @property
+    def rejected(self) -> int:
+        return self._rejected.value
+
+    @property
+    def errors(self) -> int:
+        return self._errors.value
+
+    @property
+    def shed(self) -> int:
+        return self._shed.value
+
+    @property
     def mean_batch(self) -> float:
         return self.batched_rows / max(self.batches, 1)
 
@@ -171,6 +194,10 @@ class ServiceStats:
             "batches": self.batches,
             "cache_hits": self.cache_hits,
             "cache_hit_rate": self.cache_hits / max(self.requests, 1),
+            "rejected": self.rejected,
+            "errors": self.errors,
+            "shed": self.shed,
+            "staleness_s": self.staleness_s.value,
             "mean_batch": self.mean_batch,
             "queue_wait_ms": q(self.queue_wait_ms),
             "latency_ms": q(self.latency_ms),
@@ -191,7 +218,18 @@ class _Request:
 
 
 class RelationalScoringService:
-    """Queue → coalesce → jitted batched scorer → dispatch futures."""
+    """Queue → coalesce → jitted batched scorer → dispatch futures.
+
+    Live-telemetry hooks: an attached :class:`~repro.obs.slo.SLOMonitor`
+    receives every request's latency/outcome plus the served model's
+    data staleness, and its burn-rate state feeds BACK into the batcher
+    as an overload signal — ``degraded`` collapses the coalescing window
+    (drain-greedily, stop queue wait compounding the tail), ``unhealthy``
+    sheds new admissions with :class:`ServiceOverloadedError` (the hook
+    the ROADMAP's admission-control item extends).  An attached
+    :class:`~repro.obs.flight.FlightRecorder` is fed the same
+    latencies/errors so tail incidents snapshot themselves.
+    """
 
     def __init__(
         self,
@@ -200,13 +238,21 @@ class RelationalScoringService:
         max_batch: int = 64,
         max_wait_ms: float = 2.0,
         cache_size: int = 4096,
+        slo=None,                        # SLOMonitor, optional
+        flight=None,                     # FlightRecorder, optional
+        shed_when_unhealthy: bool = True,
     ):
         self.registry = registry
         self.group_by = group_by
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
-        self.cache = LRUCache(cache_size)
         self.stats = ServiceStats()
+        # the LRU reports into THIS service's registry, not the process
+        # one — co-hosted services keep their service.lru.* series apart
+        self.cache = LRUCache(cache_size, registry=self.stats.registry)
+        self.slo = slo
+        self.flight = flight
+        self.shed_when_unhealthy = shed_when_unhealthy
         self._q: "asyncio.Queue" = asyncio.Queue()
         self._task: Optional["asyncio.Task"] = None
 
@@ -235,6 +281,14 @@ class RelationalScoringService:
                 item.future.set_exception(RuntimeError("service stopped"))
 
     # -------------------------------------------------------------- serving --
+    def _observe_latency(self, ms: float, error: bool = False) -> None:
+        self.stats.latency_ms.observe(ms)
+        if self.slo is not None:
+            self.slo.record_latency(ms)
+            self.slo.record_request(error=error)
+        if self.flight is not None:
+            self.flight.observe_latency(ms)
+
     async def score(self, row_id: int, version: Optional[int] = None) -> float:
         """Mean prediction Σŷ/count for one row of ``group_by``."""
         if self._task is None or self._task.done():
@@ -243,11 +297,21 @@ class RelationalScoringService:
         v, ens = self.registry.get(version)
         # validate per request (a bad id inside a coalesced batch must not
         # fail its co-batched neighbours); rejected requests don't count
+        # toward requests/latency — they never entered the scoring path
         n = ens.n_rows(self.group_by)
         if not 0 <= row_id < n:
+            self.stats._rejected.inc()
             raise IndexError(
                 f"row id {row_id} out of range for table {self.group_by!r} (n_rows={n})"
             )
+        # admission control: an unhealthy burn-rate state means the loop
+        # is past its SLO on both windows — shed before enqueueing more
+        if (self.slo is not None and self.shed_when_unhealthy
+                and self.slo.state() == "unhealthy"):
+            self.stats._shed.inc()
+            raise ServiceOverloadedError(
+                f"load shed: SLO state unhealthy "
+                f"(burn rates over budget; see /healthz)")
         self.stats._requests.inc()
         # cache key includes the model's data_version: delta maintenance
         # mutates a published MaintainedScorer in place, and a stale hit
@@ -255,19 +319,34 @@ class RelationalScoringService:
         cached = self.cache.get((v, getattr(ens, "data_version", 0), row_id))
         if cached is not None:
             self.stats._cache_hits.inc()
-            self.stats.latency_ms.observe((time.perf_counter() - t0) * 1e3)
+            self._observe_latency((time.perf_counter() - t0) * 1e3)
             return cached
         fut = asyncio.get_running_loop().create_future()
         await self._q.put(_Request(int(row_id), v, fut, t0))
         try:
-            return await fut
-        finally:
-            self.stats.latency_ms.observe((time.perf_counter() - t0) * 1e3)
+            result = await fut
+        except Exception:
+            self._observe_latency((time.perf_counter() - t0) * 1e3, error=True)
+            raise
+        self._observe_latency((time.perf_counter() - t0) * 1e3)
+        return result
 
     async def score_many(self, row_ids, version: Optional[int] = None) -> List[float]:
-        return list(await asyncio.gather(
-            *(self.score(r, version) for r in row_ids)
-        ))
+        """Score a batch; sibling results survive individual failures.
+
+        A bare gather would cancel every co-batched request the moment
+        one row id is rejected.  Instead all requests run to completion
+        (``return_exceptions=True``) — survivors resolve, land in the
+        cache, and count in the stats — and only then is the first
+        failure re-raised."""
+        results = await asyncio.gather(
+            *(self.score(r, version) for r in row_ids),
+            return_exceptions=True,
+        )
+        for r in results:
+            if isinstance(r, BaseException):
+                raise r
+        return list(results)
 
     # -------------------------------------------------------------- batcher --
     async def _collect(self) -> Optional[List[_Request]]:
@@ -278,7 +357,12 @@ class RelationalScoringService:
             return None
         batch = [first]
         loop = asyncio.get_running_loop()
-        deadline = loop.time() + self.max_wait
+        # overload signal: once degraded, queue wait is compounding the
+        # tail — stop holding batches open and drain greedily instead
+        wait = self.max_wait
+        if self.slo is not None and self.slo.state() != "healthy":
+            wait = 0.0
+        deadline = loop.time() + wait
         while len(batch) < self.max_batch:
             try:                             # greedy drain: no await overhead
                 item = self._q.get_nowait()
@@ -309,6 +393,15 @@ class RelationalScoringService:
             for v, reqs in by_version.items():
                 _, ens = self.registry.get(v)
                 dv = getattr(ens, "data_version", 0)
+                # served-data staleness: the wall-clock lag this batch is
+                # about to resolve (a MaintainedScorer folds applied-but-
+                # unrefreshed deltas in during score_mean_rows below)
+                stale = getattr(ens, "staleness_s", None)
+                if callable(stale):
+                    s = stale()
+                    st.staleness_s.set(s)
+                    if self.slo is not None:
+                        self.slo.set_staleness(s)
                 ids = np.asarray([r.row_id for r in reqs], np.int32)
                 t_exec = time.perf_counter()
                 mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
@@ -330,6 +423,9 @@ class RelationalScoringService:
             try:
                 self._dispatch(batch)
             except Exception as e:      # propagate to the callers, keep serving
+                self.stats._errors.inc(len(batch))
+                if self.flight is not None:
+                    self.flight.observe_error(e, batch_size=len(batch))
                 for r in batch:
                     if not r.future.done():
                         r.future.set_exception(e)

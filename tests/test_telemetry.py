@@ -1,0 +1,756 @@
+"""Live telemetry: flight-recorder ring + trigger dumps, Prometheus/JSON
+exposition endpoints, SLO burn-rate monitoring, and the service wiring
+that feeds them — per-service metric isolation, partial-failure batch
+semantics, staleness lifecycle, and the latency-spike → degraded-state →
+flight-dump acceptance path."""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import BoostConfig, Booster
+from repro.incremental import MaintainedScorer
+from repro.obs import (
+    FlightRecorder, MetricsRegistry, PeriodicSampler, SLOMonitor,
+    SLOObjective, TelemetryServer, disable_tracing, enable_tracing,
+    get_tracer, parse_slo_spec, render_json, render_prometheus, span,
+)
+from repro.obs.trace import Tracer
+from repro.relational.generators import delta_stream
+from repro.serving import (
+    ModelRegistry, RelationalScoringService, ServiceOverloadedError,
+    compile_ensemble,
+)
+from repro.serving.service import LRUCache
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends with tracing disabled (process-global)."""
+    disable_tracing()
+    yield
+    disable_tracing()
+    get_tracer().set_unbounded()
+
+
+def _fit(sch, n_trees=2, depth=2):
+    b = Booster(sch, BoostConfig(n_trees=n_trees, depth=depth,
+                                 mode="sketch", ssr_mode="off"))
+    trees, _ = b.fit()
+    return trees
+
+
+@pytest.fixture(scope="module")
+def star_compiled(star):
+    sch = star[0]
+    trees = _fit(sch)
+    return sch, trees, compile_ensemble(sch, trees)
+
+
+class FakeClock:
+    """Deterministic monotonic clock for SLO window tests."""
+
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+def _mon(objectives, clk, fast=60.0, slow=600.0, **kw):
+    kw.setdefault("registry", MetricsRegistry())
+    kw.setdefault("state_ttl_s", 0.0)
+    return SLOMonitor(objectives, fast_window_s=fast, slow_window_s=slow,
+                      clock=clk, **kw)
+
+
+# -------------------------------------------------------------- exposition --
+
+def test_render_prometheus_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.counter("tel.hits").inc(3)
+    reg.gauge("tel.depth").set(2.5)
+    h = reg.histogram("tel.lat_ms")
+    for v in (1.0, 2.0, 4.0, 8.0):
+        h.observe(v)
+    text = render_prometheus(reg.snapshot())
+    assert "# TYPE repro_tel_hits counter" in text
+    assert "repro_tel_hits 3" in text
+    assert "# TYPE repro_tel_depth gauge" in text
+    assert "repro_tel_depth 2.5" in text
+    assert "# TYPE repro_tel_lat_ms summary" in text
+    assert 'repro_tel_lat_ms{quantile="0.5"}' in text
+    assert 'repro_tel_lat_ms{quantile="0.99"}' in text
+    assert "repro_tel_lat_ms_sum 15.0" in text
+    assert "repro_tel_lat_ms_count 4" in text
+    assert text.endswith("\n")
+
+
+def test_render_prometheus_sanitizes_names_and_namespace():
+    snap = {"weird-name.ms/x": {"type": "counter", "value": 2}}
+    text = render_prometheus(snap)
+    assert "repro_weird_name_ms_x 2" in text
+    text2 = render_prometheus(snap, namespace="")
+    assert "\nweird_name_ms_x 2" in "\n" + text2
+
+
+def test_render_json_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc(7)
+    doc = json.loads(render_json(reg.snapshot()))
+    assert doc["a.b"]["value"] == 7
+
+
+# --------------------------------------------------------------- SLO spec --
+
+def test_parse_slo_spec_full_grammar():
+    objs = {o.name: o for o in
+            parse_slo_spec("latency=50ms@0.99, errors=0.01, staleness=5s")}
+    assert objs["latency"].kind == "latency"
+    assert objs["latency"].target == 50.0
+    assert objs["latency"].objective == 0.99
+    assert objs["errors"].kind == "error_rate"
+    assert objs["errors"].target == 0.01
+    assert objs["staleness"].kind == "staleness"
+    assert objs["staleness"].target == 5.0
+
+
+def test_parse_slo_spec_units_and_defaults():
+    (lat,) = parse_slo_spec("latency=1s")
+    assert lat.target == 1000.0 and lat.objective == 0.99
+    (st,) = parse_slo_spec("staleness=500ms")
+    assert st.target == 0.5
+
+
+@pytest.mark.parametrize("bad", ["", "latency", "latency=abc",
+                                 "qps=100", "errors=0.01ms"])
+def test_parse_slo_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_slo_spec(bad)
+
+
+def test_slo_objective_validation():
+    with pytest.raises(ValueError):
+        SLOObjective("x", "throughput", 1.0)
+    with pytest.raises(ValueError):
+        SLOObjective("x", "latency", 0.0)
+    with pytest.raises(ValueError):
+        SLOObjective("x", "latency", 50.0, objective=1.0)
+    with pytest.raises(ValueError):
+        SLOMonitor([SLOObjective("x", "latency", 50.0)],
+                   fast_window_s=60.0, slow_window_s=60.0)
+
+
+# ---------------------------------------------------------- SLO burn rates --
+
+def test_latency_burn_state_transitions_and_recovery():
+    clk = FakeClock()
+    mon = _mon([SLOObjective("latency", "latency", 50.0, objective=0.9)], clk)
+    for _ in range(100):
+        mon.record_latency(10.0)
+    assert mon.state() == "healthy"
+    # 30 bad / 130 total = 0.23 bad fraction; budget 0.1 → burn 2.3
+    for _ in range(30):
+        mon.record_latency(500.0)
+    assert mon.state() == "degraded"
+    rep = mon.evaluate()
+    assert rep["objectives"]["latency"]["burn_fast"] == pytest.approx(2.3, rel=0.05)
+    # 230/330 bad → burn ≈ 7 → unhealthy
+    for _ in range(200):
+        mon.record_latency(500.0)
+    assert mon.state() == "unhealthy"
+    # everything ages out of the slow window → budget no longer burning
+    clk.advance(700.0)
+    assert mon.state() == "healthy"
+
+
+def test_fast_spike_alone_does_not_degrade():
+    """Multi-window rule: the slow window vetoes a short blip."""
+    clk = FakeClock()
+    mon = _mon([SLOObjective("latency", "latency", 50.0, objective=0.9)], clk)
+    for _ in range(1000):
+        mon.record_latency(1.0)
+    clk.advance(100.0)                   # good traffic leaves the fast window
+    for _ in range(20):
+        mon.record_latency(500.0)
+    rep = mon.evaluate()
+    o = rep["objectives"]["latency"]
+    assert o["burn_fast"] >= 6.0         # fast window is all bad
+    assert o["burn_slow"] < 1.0          # slow window keeps perspective
+    assert rep["state"] == "healthy"
+
+
+def test_error_rate_objective():
+    clk = FakeClock()
+    mon = _mon([SLOObjective("errors", "error_rate", 0.05)], clk)
+    for _ in range(100):
+        mon.record_request(error=False)
+    assert mon.state() == "healthy"
+    for _ in range(50):
+        mon.record_request(error=True)
+    assert mon.state() == "unhealthy"    # 33% errors vs 5% budget → burn 6.7
+    assert mon.compliance("errors") == pytest.approx(100 / 150)
+
+
+def test_staleness_objective_is_gauge_semantics():
+    clk = FakeClock()
+    mon = _mon([SLOObjective("staleness", "staleness", 5.0)], clk)
+    mon.set_staleness(2.0)
+    assert mon.state() == "healthy"
+    mon.set_staleness(12.0)
+    assert mon.state() == "degraded"
+    mon.set_staleness(40.0)
+    assert mon.state() == "unhealthy"
+    mon.set_staleness(0.0)
+    assert mon.state() == "healthy"
+
+
+def test_no_traffic_burns_no_budget():
+    clk = FakeClock()
+    mon = _mon([SLOObjective("latency", "latency", 50.0)], clk)
+    assert mon.state() == "healthy"
+    assert mon.compliance("latency") is None
+
+
+def test_evaluate_mirrors_gauges_into_registry():
+    clk = FakeClock()
+    reg = MetricsRegistry()
+    mon = _mon([SLOObjective("latency", "latency", 50.0, objective=0.9)],
+               clk, registry=reg)
+    for _ in range(10):
+        mon.record_latency(500.0)
+    mon.evaluate()
+    snap = reg.snapshot()
+    assert snap["slo.latency.burn_fast"]["value"] >= 6.0
+    assert snap["slo.state"]["value"] == 2    # unhealthy
+
+
+def test_state_ttl_caches_evaluation():
+    clk = FakeClock()
+    mon = _mon([SLOObjective("latency", "latency", 50.0, objective=0.9)],
+               clk, state_ttl_s=10.0)
+    assert mon.state() == "healthy"
+    for _ in range(50):
+        mon.record_latency(500.0)
+    assert mon.state() == "healthy"      # cached verdict inside the TTL
+    clk.advance(11.0)
+    assert mon.state() != "healthy"
+
+
+# ------------------------------------------------------------ flight recorder --
+
+def _feed(tr, n, start=0):
+    for i in range(start, start + n):
+        tr.record({"name": f"s{i}", "ts_ms": float(i), "dur_ms": 1.0,
+                   "tid": 0, "depth": 0})
+
+
+def test_flight_ring_wraps_and_keeps_newest(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=16, out_dir=str(tmp_path), tracer=tr).start()
+    assert tr.enabled and tr.ring_capacity == 16
+    _feed(tr, 40)
+    assert len(tr.events) == 16          # O(1) memory: oldest overwritten
+    names = [e["name"] for e in fl.snapshot()]
+    assert names == [f"s{i}" for i in range(24, 40)]
+    fl.stop()
+    assert tr.ring_capacity is None and not tr.enabled
+
+
+def test_flight_trigger_dump_is_perfetto_loadable(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=8, out_dir=str(tmp_path), name="t",
+                        tracer=tr).start()
+    _feed(tr, 5)
+    path = fl.trigger("manual test", batch=3)
+    assert path and path.endswith("FLIGHT_t_000.json")
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert len(events) == 6              # 5 spans + the trigger instant
+    assert all(e["ph"] in ("X", "i") for e in events)
+    trig = events[-1]
+    assert trig["name"] == "flight.trigger" and trig["ph"] == "i"
+    assert trig["s"] == "g" and trig["args"]["reason"] == "manual test"
+    assert trig["args"]["batch"] == 3
+
+
+def test_flight_latency_and_error_triggers(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=8, out_dir=str(tmp_path), tracer=tr,
+                        latency_trigger_ms=100.0, cooldown_s=0.0).start()
+    assert fl.observe_latency(50.0) is None          # under threshold
+    assert fl.observe_latency(150.0) is not None
+    assert fl.observe_error(RuntimeError("boom")) is not None
+    fl2 = FlightRecorder(capacity=8, out_dir=str(tmp_path), name="noerr",
+                         tracer=tr, error_trigger=False)
+    assert fl2.observe_error(RuntimeError("boom")) is None
+
+
+def test_flight_cooldown_and_budget_suppress(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=8, out_dir=str(tmp_path), name="cd",
+                        tracer=tr, cooldown_s=1000.0).start()
+    assert fl.trigger("first") is not None
+    assert fl.trigger("second") is None              # inside the cooldown
+    assert fl.suppressed == 1
+    fl3 = FlightRecorder(capacity=8, out_dir=str(tmp_path), name="cap",
+                         tracer=tr, cooldown_s=0.0, max_dumps=2).start()
+    assert sum(fl3.trigger(f"n{i}") is not None for i in range(5)) == 2
+    assert fl3.suppressed == 3
+    assert fl3.status()["suppressed"] == 3
+
+
+def test_flight_trigger_thread_safety(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=64, out_dir=str(tmp_path), name="thr",
+                        tracer=tr, latency_trigger_ms=1.0, cooldown_s=0.0,
+                        max_dumps=4).start()
+
+    def hammer(k):
+        for i in range(10):
+            _feed(tr, 1, start=k * 100 + i)
+            fl.observe_latency(5.0, worker=k)
+
+    threads = [threading.Thread(target=hammer, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dumps = [d for d in fl.status()["dumps"] if d["path"]]
+    assert len(dumps) == 4               # budget enforced under contention
+    assert fl.suppressed == 80 - 4
+    for d in dumps:                      # every dump is a complete document
+        with open(d["path"]) as f:
+            assert json.load(f)["traceEvents"]
+
+
+def test_tracer_clear_resets_thread_local_stacks():
+    """Regression: a span leaked on ANY thread must not skew the depth of
+    later spans after clear() — clear resets every thread's stack."""
+    enable_tracing(jax_annotations=False)
+    leaked = span("leaked")
+    leaked.__enter__()                   # never exited: simulates a leak
+    ready, resume = threading.Event(), threading.Event()
+
+    def worker():
+        w = span("w_leaked")
+        w.__enter__()                    # leak on a second thread too
+        ready.set()
+        resume.wait(5.0)
+        with span("w_after"):
+            pass
+
+    t = threading.Thread(target=worker)
+    t.start()
+    ready.wait(5.0)
+    get_tracer().clear()
+    resume.set()
+    t.join(5.0)
+    with span("after"):
+        pass
+    depths = {e["name"]: e["depth"] for e in get_tracer().events}
+    assert depths["after"] == 0
+    assert depths["w_after"] == 0
+
+
+# ------------------------------------------------------------ HTTP endpoints --
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5.0) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read().decode()
+
+
+def test_telemetry_server_endpoints(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("tel.hits").inc(3)
+    clk = FakeClock()
+    slo = _mon([SLOObjective("latency", "latency", 50.0, objective=0.9)],
+               clk, registry=reg)
+    tr = Tracer(jax_annotations=False)
+    tr.set_ring(8)
+    _feed(tr, 5)
+    flight = FlightRecorder(capacity=8, out_dir=str(tmp_path), tracer=tr)
+    ts = TelemetryServer(registries=[reg], slo=slo, flight=flight, tracer=tr,
+                         status_fn=lambda: {"model_version": 7})
+    port = ts.start_in_thread()
+    assert port > 0 and ts.url("/healthz").endswith(f":{port}/healthz")
+    try:
+        code, ctype, body = _get(ts.url("/metricsz"))
+        assert code == 200 and ctype.startswith("text/plain")
+        assert "repro_tel_hits 3" in body
+
+        code, ctype, body = _get(ts.url("/metricsz?format=json"))
+        assert code == 200 and ctype == "application/json"
+        assert json.loads(body)["tel.hits"]["value"] == 3
+
+        code, _, body = _get(ts.url("/healthz"))
+        doc = json.loads(body)
+        assert code == 200 and doc["state"] == "healthy"
+
+        for _ in range(50):              # drive the SLO past both windows
+            slo.record_latency(500.0)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(ts.url("/healthz"))
+        assert ei.value.code == 503
+        assert json.loads(ei.value.read().decode())["state"] == "unhealthy"
+
+        code, _, body = _get(ts.url("/statusz"))
+        doc = json.loads(body)
+        assert code == 200 and doc["model_version"] == 7
+        assert doc["uptime_s"] >= 0.0
+        assert doc["slo"]["state"] == "unhealthy"
+        assert doc["flight"]["capacity"] == 8
+
+        code, _, body = _get(ts.url("/tracez?n=2"))
+        doc = json.loads(body)
+        assert code == 200 and doc["ring_capacity"] == 8
+        assert [s["name"] for s in doc["spans"]] == ["s3", "s4"]
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(ts.url("/nope"))
+        assert ei.value.code == 404
+    finally:
+        ts.stop_thread()
+
+
+def test_telemetry_server_without_slo_reports_healthy():
+    reg = MetricsRegistry()
+    ts = TelemetryServer(registries=[reg])
+    ts.start_in_thread()
+    try:
+        code, _, body = _get(ts.url("/healthz"))
+        assert code == 200 and json.loads(body)["slo"] is None
+    finally:
+        ts.stop_thread()
+
+
+def test_telemetry_server_status_fn_error_is_contained():
+    def boom():
+        raise RuntimeError("status exploded")
+
+    ts = TelemetryServer(registries=[MetricsRegistry()], status_fn=boom)
+    ts.start_in_thread()
+    try:
+        code, _, body = _get(ts.url("/statusz"))
+        assert code == 200
+        assert "status exploded" in json.loads(body)["status_error"]
+    finally:
+        ts.stop_thread()
+
+
+def test_periodic_sampler_appends_jsonl_deltas(tmp_path):
+    reg = MetricsRegistry()
+    path = tmp_path / "telemetry_test.jsonl"
+    s = PeriodicSampler(str(path), interval_s=60.0, registries=[reg],
+                        extra_fn=lambda: {"ctx": 42})
+    s.start()
+    reg.counter("work.items").inc(5)
+    line = s.sample()
+    assert line["series"]["work.items"]["value"] == 5   # per-window delta
+    reg.counter("work.items").inc(2)
+    s.stop()                              # writes the final window
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == s.samples == 2
+    assert all(set(l) >= {"t", "dt_s", "series", "ctx"} for l in lines)
+    assert lines[-1]["series"]["work.items"]["value"] == 2
+    assert lines[-1]["ctx"] == 42
+
+
+# ----------------------------------------------------------- service wiring --
+
+def test_lru_cache_isolated_per_registry():
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    c1, c2 = LRUCache(4, registry=r1), LRUCache(4, registry=r2)
+    c1.put("k", 1.0)
+    c1.get("k")
+    c1.get("missing")
+    c2.get("missing")
+    s1, s2 = r1.snapshot(), r2.snapshot()
+    assert s1["service.lru.hits"]["value"] == 1
+    assert s1["service.lru.misses"]["value"] == 1
+    assert s2["service.lru.hits"]["value"] == 0
+    assert s2["service.lru.misses"]["value"] == 1
+
+
+def test_cohosted_services_do_not_mix_cache_series(star_compiled):
+    """Regression: the LRU used to report into the process-global
+    registry, so two services' hit/miss series merged."""
+    sch, trees, ens = star_compiled
+
+    async def run():
+        reg_a, reg_b = ModelRegistry(), ModelRegistry()
+        reg_a.publish(ens)
+        reg_b.publish(ens)
+        a = RelationalScoringService(reg_a, sch.label_table, max_wait_ms=0.2)
+        b = RelationalScoringService(reg_b, sch.label_table, max_wait_ms=0.2)
+        await a.start()
+        await b.start()
+        await a.score_many([0, 1])                  # populate a's cache
+        await a.score_many([0, 1, 0, 1])            # 4 hits
+        await b.score_many([2])                     # misses only
+        await a.stop()
+        await b.stop()
+        return a, b
+
+    a, b = asyncio.run(run())
+    sa = a.stats.registry.snapshot()
+    sb = b.stats.registry.snapshot()
+    assert sa["service.lru.hits"]["value"] == a.cache.hits == 4
+    assert sb["service.lru.hits"]["value"] == b.cache.hits == 0
+    assert sb["service.lru.misses"]["value"] == b.cache.misses == 1
+
+
+def test_score_many_partial_failure_keeps_siblings(star_compiled):
+    """Regression: one bad row id used to cancel every co-batched
+    sibling via bare gather; now survivors resolve and cache first."""
+    sch, trees, ens = star_compiled
+    n = sch.table(sch.label_table).n_rows
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ens)
+        svc = RelationalScoringService(reg, sch.label_table, max_wait_ms=0.2)
+        await svc.start()
+        with pytest.raises(IndexError):
+            await svc.score_many([0, n + 50, 1])
+        # siblings were scored and cached despite the rejected id
+        again = await svc.score_many([0, 1])
+        await svc.stop()
+        return svc, again
+
+    svc, again = asyncio.run(run())
+    assert len(again) == 2 and all(isinstance(v, float) for v in again)
+    assert svc.stats.rejected == 1
+    assert svc.stats.requests == 4       # the bad id never counted
+    assert svc.cache.hits >= 2           # second pass served from cache
+    assert svc.stats.errors == 0
+
+
+def test_dispatch_failure_counts_errors_and_triggers_flight(star_compiled, tmp_path):
+    sch, trees, ens = star_compiled
+    tr = Tracer(jax_annotations=False)
+    flight = FlightRecorder(capacity=8, out_dir=str(tmp_path), name="err",
+                            tracer=tr, cooldown_s=0.0).start()
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ens)
+        svc = RelationalScoringService(reg, sch.label_table,
+                                       max_wait_ms=0.2, flight=flight)
+
+        def broken(batch):
+            raise RuntimeError("scorer exploded")
+
+        svc._dispatch = broken
+        await svc.start()
+        with pytest.raises(RuntimeError, match="scorer exploded"):
+            await svc.score_many([0, 1, 2])
+        await svc.stop()
+        return svc
+
+    svc = asyncio.run(run())
+    assert svc.stats.errors == 3
+    dumps = [d for d in flight.status()["dumps"] if d["path"]]
+    assert dumps and "RuntimeError" in dumps[0]["reason"]
+
+
+def test_unhealthy_slo_sheds_admissions(star_compiled):
+    sch, trees, ens = star_compiled
+    clk = FakeClock()
+    slo = _mon([SLOObjective("latency", "latency", 10.0, objective=0.9)], clk)
+    for _ in range(50):
+        slo.record_latency(500.0)        # burn ≈ 10 on both windows
+    assert slo.state() == "unhealthy"
+
+    async def run(svc):
+        await svc.start()
+        try:
+            return await svc.score(0)
+        finally:
+            await svc.stop()
+
+    reg = ModelRegistry()
+    reg.publish(ens)
+    svc = RelationalScoringService(reg, sch.label_table, slo=slo)
+    with pytest.raises(ServiceOverloadedError):
+        asyncio.run(run(svc))
+    assert svc.stats.shed == 1 and svc.stats.requests == 0
+
+    svc2 = RelationalScoringService(reg, sch.label_table, slo=slo,
+                                    shed_when_unhealthy=False)
+    assert isinstance(asyncio.run(run(svc2)), float)
+    assert svc2.stats.shed == 0
+
+
+def test_degraded_slo_collapses_coalescing_window(star_compiled):
+    """Overload signal: degraded state must stop holding batches open
+    for the full max_wait (here 0.5 s — failure would be visible)."""
+    sch, trees, ens = star_compiled
+
+    class Degraded:
+        def state(self):
+            return "degraded"
+
+        def record_latency(self, ms):
+            pass
+
+        def record_request(self, error=False):
+            pass
+
+        def set_staleness(self, s):
+            pass
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ens)
+        svc = RelationalScoringService(reg, sch.label_table, max_batch=1000,
+                                       max_wait_ms=500.0, slo=Degraded(),
+                                       cache_size=0)
+        await svc.start()
+        await svc.score(0)               # absorb the jit warmup
+        t0 = time.perf_counter()
+        await svc.score_many(list(range(8)))
+        dt = time.perf_counter() - t0
+        await svc.stop()
+        return dt
+
+    assert asyncio.run(run()) < 0.4      # did not wait out the window
+
+
+def test_latency_spike_degrades_health_and_dumps_flight(star_compiled, tmp_path):
+    """Acceptance: an injected latency spike flips the burn-rate state
+    off healthy AND triggers a Perfetto-loadable flight dump."""
+    sch, trees, ens = star_compiled
+    slo = SLOMonitor(parse_slo_spec("latency=20ms@0.9"),
+                     fast_window_s=0.5, slow_window_s=2.0,
+                     registry=MetricsRegistry(), state_ttl_s=0.0)
+    tr = Tracer(jax_annotations=False)
+    flight = FlightRecorder(capacity=64, out_dir=str(tmp_path), name="spike",
+                            tracer=tr, latency_trigger_ms=60.0,
+                            cooldown_s=0.0).start()
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ens)
+        svc = RelationalScoringService(reg, sch.label_table, max_wait_ms=0.2,
+                                       cache_size=0, flight=flight,
+                                       shed_when_unhealthy=False)
+        await svc.start()
+        await svc.score_many(list(range(16)))        # jit warmup
+        svc.slo = slo
+        for _ in range(4):                           # clean traffic
+            await svc.score_many(list(range(16)))
+        clean = slo.state()
+        orig = svc._dispatch
+        svc._dispatch = lambda b: (time.sleep(0.08), orig(b))[1]
+        for _ in range(3):                           # spiked traffic
+            await svc.score_many(list(range(16)))
+        spiked = slo.state()
+        await svc.stop()
+        return clean, spiked
+
+    clean, spiked = asyncio.run(run())
+    assert clean == "healthy"
+    assert spiked != "healthy"
+    dumps = [d for d in flight.status()["dumps"] if d["path"]]
+    assert dumps
+    with open(dumps[0]["path"]) as f:
+        events = json.load(f)["traceEvents"]
+    assert any(e["name"] == "flight.trigger" and e["ph"] == "i"
+               for e in events)
+
+
+def test_service_staleness_gauge_tracks_maintained_scorer(star_compiled):
+    sch, trees, _ = star_compiled
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    group = sch.label_table
+    ms.grouped_cached(group)
+    assert ms.staleness_s() == 0.0
+    batch = next(iter(delta_stream(sch, ms.live_rows, seed=3,
+                                   n_batches=1, ops_per_batch=2)))
+    ms.apply(batch)
+    time.sleep(0.01)
+    stale = ms.staleness_s()
+    assert stale > 0.0                   # applied but not yet refreshed
+
+    clk = FakeClock()
+    slo = _mon([SLOObjective("staleness", "staleness", 5.0)], clk)
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_wait_ms=0.2, slo=slo)
+        await svc.start()
+        out = await svc.score(0)         # dispatch refreshes the view
+        await svc.stop()
+        return svc, out
+
+    svc, out = asyncio.run(run())
+    assert isinstance(out, float)
+    assert ms.staleness_s() == 0.0       # refresh cleared the lag
+    # the gauge sampled the pre-refresh lag the batch resolved
+    assert svc.stats.snapshot()["staleness_s"] >= stale
+
+
+def test_stats_snapshot_consistent_under_concurrent_writers():
+    from repro.serving.service import ServiceStats
+
+    stats = ServiceStats()
+    stop = threading.Event()
+    N, n_workers = 500, 4
+
+    def work():
+        for i in range(N):
+            stats._requests.inc()
+            stats.latency_ms.observe(1.0 + (i % 7))
+            stats.queue_wait_ms.observe(0.5)
+
+    threads = [threading.Thread(target=work) for _ in range(n_workers)]
+    for t in threads:
+        t.start()
+    seen = []
+    while any(t.is_alive() for t in threads):
+        snap = stats.snapshot()          # must never raise mid-update
+        assert snap["latency_ms"]["count"] <= snap["requests"] + n_workers
+        seen.append(snap["requests"])
+    for t in threads:
+        t.join()
+    stop.set()
+    assert seen == sorted(seen)          # counters are monotone
+    final = stats.snapshot()
+    assert final["requests"] == N * n_workers
+    assert final["latency_ms"]["count"] == N * n_workers
+
+
+def test_flight_ring_survives_concurrent_span_writers(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    fl = FlightRecorder(capacity=32, out_dir=str(tmp_path), name="conc",
+                        tracer=tr).start()
+
+    def work(k):
+        for i in range(200):
+            tr.record({"name": f"w{k}.{i}", "ts_ms": float(i),
+                       "dur_ms": 0.1, "tid": k, "depth": 0})
+
+    threads = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(20):
+        assert len(fl.snapshot()) <= 32  # bounded at every instant
+    for t in threads:
+        t.join()
+    assert len(fl.snapshot()) == 32
+    path = fl.trigger("post-hammer")
+    with open(path) as f:
+        assert len(json.load(f)["traceEvents"]) == 33
