@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed import spmd
 from .semiring import Arithmetic
 from .sketch import sketch_factors
 
@@ -109,7 +110,18 @@ class QueryEngine:
 
 class DirectEngine(QueryEngine):
     """The paper's execution model: a full vmapped SumProd pass per query
-    family over the static schema (previously inlined in ``Booster``)."""
+    family over the static schema (previously inlined in ``Booster``).
+
+    Data-parallel under a mesh: the engine captures the ambient
+    `spmd` data mesh at ``bind`` time.  Because the per-table base
+    factors are jit *closure constants* (the level step closes over the
+    engine), device placement would not survive tracing — so sharding is
+    expressed in-graph instead: each masked factor is constrained to
+    row shards inside the vmapped query, and the grouped output is
+    constrained replicated at the engine boundary.  GSPMD then runs the
+    heavy mask/⊗/segment-⊕ work sharded while the split sweep downstream
+    sees replicated stats — identical control flow to single-device.
+    """
 
     jittable = True
     analytic_edges = True
@@ -117,6 +129,7 @@ class DirectEngine(QueryEngine):
     def bind(self, booster) -> None:
         schema = booster.schema
         self.schema = schema
+        self.mesh = spmd.current_data_mesh()
         self.sp = booster.sp
         self.c3 = booster.c3
         self.sem = booster.sem
@@ -145,25 +158,28 @@ class DirectEngine(QueryEngine):
             f = {}
             for tn in mrow:
                 keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
-                f[tn] = self.c3.mask(self._c3_base[tn], keep)
+                f[tn] = spmd.constrain_rows(
+                    self.c3.mask(self._c3_base[tn], keep), self.mesh)
             return self.sp(self.c3, f, group_by=table)
 
-        return jax.vmap(one)(masks)
+        with spmd.use_data_mesh(self.mesh):
+            return spmd.replicate(jax.vmap(one)(masks), self.mesh)
 
     def grouped_count_pair(self, table, masks, extra_a, extra_b):
         ar = Arithmetic()
 
         def one(mrow):
             f = {
-                tn: ar.mask(
+                tn: spmd.constrain_rows(ar.mask(
                     jnp.ones((self.schema.table(tn).n_rows,), jnp.float32),
                     mrow[tn] & extra_a[tn] & extra_b[tn],
-                )
+                ), self.mesh)
                 for tn in mrow
             }
             return self.sp(ar, f, group_by=table)
 
-        return jax.vmap(one)(masks)
+        with spmd.use_data_mesh(self.mesh):
+            return spmd.replicate(jax.vmap(one)(masks), self.mesh)
 
     def grouped_sketch(self, table, masks, extra=None, labeled=False):
         base = self._sk_label if labeled else self._sk_base
@@ -172,10 +188,12 @@ class DirectEngine(QueryEngine):
             f = {}
             for tn in mrow:
                 keep = mrow[tn] if extra is None else (mrow[tn] & extra[tn])
-                f[tn] = self.sem.mask(base[tn], keep)
+                f[tn] = spmd.constrain_rows(
+                    self.sem.mask(base[tn], keep), self.mesh)
             return self.sp(self.sem, f, group_by=table)
 
-        return jax.vmap(one)(masks)
+        with spmd.use_data_mesh(self.mesh):
+            return spmd.replicate(jax.vmap(one)(masks), self.mesh)
 
     # -------------------------------------------------------- data surface --
     def n_rows(self, table):

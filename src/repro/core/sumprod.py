@@ -18,8 +18,16 @@ query; we batch query families (tree nodes, leaves, leaf pairs) with
 ``vmap`` over the factor arrays — the plan (segment ids) is static.
 
 Distribution: rows shard over the data axes; ``segment-⊕`` runs
-per-shard and key-domain message vectors are ⊕-combined with ``psum``
-(see distributed/collectives.py).
+per-shard and key-domain message vectors are ⊕-combined across the axis
+at emission time.  The combine is ``spmd.psum_message`` — a replicated
+sharding constraint that GSPMD lowers to the cross-shard all-reduce —
+applied inside :meth:`SumProd.messages` / :meth:`refresh_messages` /
+:meth:`messages_memo`, so every caller (serving, boosting, IVM) gets the
+same collective point.  With no active data mesh the constraint is an
+identity and the single-device program is bit-unchanged.  Edge/query
+accounting is host-side and therefore invariant under sharding: a mesh
+moves bytes, never work.  (``distributed/collectives.py`` keeps the
+explicit shard_map+psum prototype as a reference.)
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ from typing import Dict, Hashable, Iterable, List, Optional, Set
 import jax
 import jax.numpy as jnp
 
+from ..distributed import spmd as _spmd
 from ..obs import metrics as _metrics
 from ..obs.trace import span as _span
 from .schema import Schema, JoinTree
@@ -207,7 +216,8 @@ class SumProd:
                 with _span("sumprod.emit", edge=i, child=e.child,
                            parent=e.parent, n_keys=e.n_keys):
                     cf = self.node_factor(sem, factors, jt, e.child, msgs)
-                    msgs[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+                    msgs[i] = _spmd.psum_message(
+                        sem.segment_add(cf, e.child_ids, e.n_keys))
         if self.counter is not None:
             self.counter.bump_edges(len(jt.edges))
         return msgs  # type: ignore[return-value]
@@ -239,7 +249,8 @@ class SumProd:
                     with _span("sumprod.emit", edge=i, child=e.child,
                                parent=e.parent, n_keys=e.n_keys):
                         cf = self.node_factor(sem, factors, jt, e.child, new)
-                        new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+                        new[i] = _spmd.psum_message(
+                            sem.segment_add(cf, e.child_ids, e.n_keys))
         if self.counter is not None:
             self.counter.bump_edges(sum(plan))
         return new
@@ -286,7 +297,8 @@ class SumProd:
             with _span("sumprod.emit", edge=i, child=e.child,
                        parent=e.parent, n_keys=e.n_keys):
                 cf = self.node_factor(sem, factors, jt, e.child, msgs)
-                msgs[i] = self._segment_add_any(sem, cf, e.child_ids, e.n_keys)
+                msgs[i] = _spmd.psum_message(
+                    self._segment_add_any(sem, cf, e.child_ids, e.n_keys))
             cache.put(jt.root, i, sig, msgs[i])
             recomputed += 1
         if self.counter is not None:
@@ -318,7 +330,7 @@ class SumProd:
         out = self.node_factor(sem, factors, jt, jt.root, msgs)
         if group_by is not None:
             return out
-        return sem.reduce_add(out, axis=0)
+        return _spmd.replicate(sem.reduce_add(out, axis=0))
 
 
 def materialize_join(schema: Schema) -> Dict[str, jnp.ndarray]:

@@ -1,0 +1,217 @@
+"""Data-parallel SPMD layer for the relational engine.
+
+Lifts the logical-axis→NamedSharding rule machinery from
+`distributed.sharding` (`mesh_axes`, `logical_to_spec`, divisibility
+drop) into factor/featmat layout rules for the SumProd engine, plus a
+process-wide *data-mesh context* that `serving/compile.py`,
+`core/engine.py`, `incremental/maintain.py` and `incremental/retrain.py`
+thread through.
+
+Layout rules (all derived from one logical spec, "dp" on the row axis):
+
+  factor   (n_rows, *value_shape)  → P(dp, None, ...)   rows sharded
+  featmat  (d_t, n_rows)           → P(None, dp)        rows sharded
+  mask     (..., n_rows)           → P(None, ..., dp)   rows sharded
+  message  (n_keys, *value_shape)  → P()                replicated
+
+A row dimension is sharded only when divisible by the data-axis size —
+otherwise dropped to replicated (same rule as `logical_to_spec`; small
+dimension tables replicate naturally, which is what you want: their
+messages are cheap and cross-device traffic for them would dominate).
+
+The collective point is `psum_message`: per-edge segment-⊕ messages are
+computed on row shards, and the `with_sharding_constraint` to the
+replicated spec makes GSPMD insert the cross-shard ⊕-combine (an
+all-reduce / `psum` for the arithmetic semirings, `pmin`/`pmax` for
+tropical) exactly at the message emission.  Everything downstream of a
+message is replicated, so split sweeps and tree construction run
+bit-identically to single-device; everything upstream (mask, mul,
+segment-⊕) runs on row shards.
+
+Bit-equality caveat: the cross-shard combine re-associates the ⊕
+reduction.  For integer-valued f32 payloads (leaf-mask counts — the
+whole serving path — and training stats over integer/dyadic labels)
+every partial sum is exactly representable, so sharded == single-device
+bit-for-bit.  Arbitrary float labels see ~1e-5 reassociation noise, the
+same noise any parallel reduction has.
+
+Complex payloads (the count-sketch semirings' frequency/coefficient
+monomials) are never row-sharded: their entries are unit-modulus
+complex numbers, so no partial sum is exactly representable and a
+cross-shard combine would break bit-equality.  `shard_rows` /
+`constrain_rows` detect the dtype and pin those arrays replicated —
+sketch queries run full-shape (identically) on every device while the
+count/exact-stat queries around them stay data-parallel.
+
+No jax device state is touched at import time; meshes are built by
+`launch.mesh.make_data_mesh` and installed via `use_data_mesh`.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import _axis_size, mesh_axes
+
+
+def _exact_payload(x) -> bool:
+    """False for payloads whose cross-shard ⊕ cannot be exact (complex
+    sketch monomials) — those must stay replicated."""
+    return not np.issubdtype(np.dtype(x.dtype), np.complexfloating)
+
+# Process-wide active data mesh.  Plain module global with save/restore
+# via `use_data_mesh` — mesh installation happens on the orchestrating
+# thread; long-lived objects (CompiledEnsemble, MaintainedScorer,
+# MaintainedEngine) capture the mesh at construction and re-enter it
+# themselves, so worker threads never depend on ambient state.
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def current_data_mesh() -> Optional[Mesh]:
+    """The active data mesh, or None (single-device semantics)."""
+    return _ACTIVE_MESH
+
+
+def _resolve(mesh: Optional[Mesh]) -> Optional[Mesh]:
+    """Normalize to an effective mesh: explicit arg wins, else ambient;
+    size-1 meshes degrade to None (every helper becomes identity)."""
+    m = mesh if mesh is not None else _ACTIVE_MESH
+    if m is None or m.size <= 1:
+        return None
+    return m
+
+
+def data_axis_size(mesh: Optional[Mesh] = None) -> int:
+    """Number of shards along the data axes (1 when no mesh is active)."""
+    m = _resolve(mesh)
+    if m is None:
+        return 1
+    return _axis_size(m, mesh_axes(m)["dp"])
+
+
+@contextmanager
+def use_data_mesh(mesh: Optional[Mesh]):
+    """Install `mesh` as the ambient data mesh for the dynamic extent.
+
+    `use_data_mesh(None)` explicitly clears the context (single-device
+    semantics), so an unsharded ensemble traced inside a sharded
+    orchestrator stays deterministic.
+    """
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def _row_spec(ndim: int, row_axis: int, mesh: Mesh, rows: int) -> P:
+    """PartitionSpec sharding `row_axis` over dp iff divisible."""
+    dp = mesh_axes(mesh)["dp"]
+    if not dp or rows % _axis_size(mesh, dp) != 0:
+        return P()
+    spec = [None] * ndim
+    spec[row_axis] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+# -- placement (device_put): host arrays → sharded/replicated buffers --
+
+def shard_rows(x, mesh: Optional[Mesh] = None, row_axis: int = 0):
+    """device_put with rows sharded over the data axes (factor layout:
+    row_axis=0; featmat layout: row_axis=1; mask layout: row_axis=-1).
+    Identity when no mesh is active or rows aren't divisible."""
+    m = _resolve(mesh)
+    if m is None:
+        return x
+    ra = row_axis % x.ndim
+    spec = (_row_spec(x.ndim, ra, m, x.shape[ra])
+            if _exact_payload(x) else P())
+    return jax.device_put(x, NamedSharding(m, spec))
+
+
+def shard_factor(x, mesh: Optional[Mesh] = None):
+    """(n_rows, *value_shape) factor: rows sharded, values local."""
+    return shard_rows(x, mesh, row_axis=0)
+
+
+def shard_featmat(x, mesh: Optional[Mesh] = None):
+    """(d_t, n_rows) feature matrix: rows (axis 1) sharded."""
+    return shard_rows(x, mesh, row_axis=1)
+
+
+def shard_factors(factors: Dict[str, jax.Array],
+                  mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
+    """Shard a {table: factor} dict by rows (per-table divisibility)."""
+    m = _resolve(mesh)
+    if m is None:
+        return factors
+    return {t: shard_factor(f, m) for t, f in factors.items()}
+
+
+def replicate_put(x, mesh: Optional[Mesh] = None):
+    """device_put replicated across the mesh (leaf values, small tables)."""
+    m = _resolve(mesh)
+    if m is None:
+        return x
+    return jax.device_put(x, NamedSharding(m, P()))
+
+
+# -- in-graph constraints (with_sharding_constraint): trace-time hints --
+
+def constrain_rows(x, mesh: Optional[Mesh] = None, row_axis: int = 0):
+    """In-graph row-sharding constraint.  Use where sharded placement
+    can't stick — closure constants under jit (DirectEngine bases) or
+    intermediate factors inside a vmapped query."""
+    m = _resolve(mesh)
+    if m is None:
+        return x
+    ra = row_axis % x.ndim
+    spec = (_row_spec(x.ndim, ra, m, x.shape[ra])
+            if _exact_payload(x) else P())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+
+
+def psum_message(x, mesh: Optional[Mesh] = None):
+    """THE collective point: constrain a per-edge message (or grouped
+    query output) to replicated.  With row-sharded inputs upstream,
+    GSPMD lowers this to the cross-shard segment-⊕ combine — the psum.
+    Identity when no mesh is active (bit-identical single-device path).
+    """
+    m = _resolve(mesh)
+    if m is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, P()))
+
+
+# `replicate` reads better at engine boundaries where the intent is
+# "make this deterministic for host-side control flow", not a reduction.
+replicate = psum_message
+
+
+def mesh_fingerprint(mesh: Optional[Mesh] = None) -> Optional[Dict[str, int]]:
+    """{axis: size} for BENCH fingerprints; None when unsharded."""
+    m = _resolve(mesh)
+    if m is None:
+        return None
+    return {k: int(v) for k, v in m.shape.items()}
+
+
+def is_row_sharded(x, mesh: Optional[Mesh] = None, row_axis: int = 0) -> bool:
+    """True if `x` actually carries a row-sharded placement (test hook)."""
+    m = _resolve(mesh)
+    if m is None:
+        return False
+    sh = getattr(x, "sharding", None)
+    if sh is None:
+        return False
+    spec = getattr(sh, "spec", None)
+    if spec is None:
+        return False
+    ra = row_axis % x.ndim
+    return len(spec) > ra and spec[ra] is not None

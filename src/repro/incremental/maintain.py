@@ -47,13 +47,24 @@ import numpy as np
 from ..obs import get_registry, span
 from ..core.schema import Schema
 from ..core.sumprod import QueryCounter, SumProd, refresh_plan
+from ..distributed import spmd
 from ..serving.compile import CompiledEnsemble, compile_ensemble, stack_table_factor
 from .deltas import DynamicEdge, DynamicTable, TableDelta
 from .state import DynamicState
 
 
 class MaintainedScorer:
-    """A compiled ensemble plus the dynamic state that keeps it fresh."""
+    """A compiled ensemble plus the dynamic state that keeps it fresh.
+
+    Sharding: inherits the source ensemble's data mesh (or the ambient
+    `spmd` context).  Capacity-padded factors are placed row-sharded
+    when the capacity divides the data axis (capacities are slack-padded
+    and growth-doubled, so tables fall back to replicated whenever they
+    don't — correct either way under the divisibility drop rule);
+    message (re-)emission inside the cached/jitted refresh is the
+    collective point, and grouped counts are replicated before the final
+    contraction so served scores are bit-equal to single-device.
+    """
 
     def __init__(self, ens: CompiledEnsemble, slack: float = 0.25,
                  counter: Optional[QueryCounter] = None):
@@ -69,6 +80,7 @@ class MaintainedScorer:
         self._sp = SumProd(sch, counter=self.counter)
         self.factor_dtype = ens.factor_dtype
         self.data_version = 0
+        self.mesh = ens.mesh if ens.mesh is not None else spmd.current_data_mesh()
 
         self.state = DynamicState(sch, slack=slack)
         self.tables: Dict[str, DynamicTable] = self.state.tables
@@ -79,10 +91,11 @@ class MaintainedScorer:
         for t in sch.tables:
             dt = self.tables[t.name]
             pad = dt.capacity - t.n_rows
-            self.factors[t.name] = jnp.concatenate([
+            self.factors[t.name] = spmd.shard_factor(jnp.concatenate([
                 ens.factors[t.name],
                 jnp.zeros((pad, self.total_leaves), self.factor_dtype),
-            ])
+            ]), self.mesh)
+        self.leaf_values = spmd.replicate_put(self.leaf_values, self.mesh)
 
         # jitted per-table delta-row mask evaluation (compile-once per
         # (table, delta-rows) shape — the apply() hot path)
@@ -129,10 +142,12 @@ class MaintainedScorer:
                 if ch.grew:
                     cur = self.factors[ch.table]
                     cap = self.tables[ch.table].capacity
-                    self.factors[ch.table] = jnp.concatenate([
+                    # re-place after growth: the new capacity may (not)
+                    # divide the data axis — shard_factor re-resolves
+                    self.factors[ch.table] = spmd.shard_factor(jnp.concatenate([
                         cur,
                         jnp.zeros((cap - cur.shape[0], cur.shape[1]), cur.dtype),
-                    ])
+                    ]), self.mesh)
                 # zero deleted slots BEFORE scattering fresh rows: an insert in
                 # this same delta may have reused a just-deleted slot
                 if len(ch.deleted):
@@ -213,6 +228,7 @@ class MaintainedScorer:
         if hit is not None:
             return hit
         sem, sp = self._sem, self._sp                # node_factor never bumps
+        mesh = self.mesh
         plan = refresh_plan(jt, dirty)
         pads = [max(0, e.n_keys - msgs[i].shape[0])
                 for i, e in enumerate(jt.edges)]
@@ -226,7 +242,8 @@ class MaintainedScorer:
                     )
                 if plan[i]:
                     cf = sp.node_factor(sem, factors, jt, e.child, new)
-                    new[i] = sem.segment_add(cf, e.child_ids, e.n_keys)
+                    new[i] = spmd.psum_message(
+                        sem.segment_add(cf, e.child_ids, e.n_keys), mesh)
             return new
 
         out = (jax.jit(run), sum(plan))
@@ -241,7 +258,8 @@ class MaintainedScorer:
         sem, sp = self._sem, self._sp
         dirty = self._dirty.get(group_by)
         if group_by not in self._msgs:
-            self._msgs[group_by] = sp.messages(sem, self.factors, jt=jt)
+            with spmd.use_data_mesh(self.mesh):
+                self._msgs[group_by] = sp.messages(sem, self.factors, jt=jt)
         elif dirty:
             t0 = time.perf_counter()
             with span("ivm.refresh", root=group_by, dirty=len(dirty)):
@@ -260,7 +278,10 @@ class MaintainedScorer:
                 time.perf_counter() - self._stale_since)
             reg.gauge("ivm.staleness_s").set(0.0)
             self._stale_since = None
-        return sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by])
+        # replicate before the serving contraction (see score_grouped)
+        return spmd.replicate(
+            sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by]),
+            self.mesh)
 
     def score_grouped(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(Σŷ, |ρ⋈J|) per slot of ``group_by`` — maintained counts, same
@@ -290,11 +311,15 @@ class MaintainedScorer:
         ulps).  A jitted ``compile_ensemble(...).score_grouped`` agrees
         to allclose, not bitwise — its fused matvec reassociates."""
         eff = self.effective_schema()
-        fresh = compile_ensemble(eff, self.trees, factor_dtype=self.factor_dtype)
-        sp = SumProd(eff)
-        jt = eff.join_tree(group_by)
-        msgs = sp.messages(fresh._sem, fresh.factors, jt=jt)
-        counts = sp.node_factor(fresh._sem, fresh.factors, jt, jt.root, msgs)
+        # the oracle is pinned single-device (use_data_mesh(None) clears
+        # any ambient mesh): ground truth must not depend on sharding
+        with spmd.use_data_mesh(None):
+            fresh = compile_ensemble(eff, self.trees,
+                                     factor_dtype=self.factor_dtype)
+            sp = SumProd(eff)
+            jt = eff.join_tree(group_by)
+            msgs = sp.messages(fresh._sem, fresh.factors, jt=jt)
+            counts = sp.node_factor(fresh._sem, fresh.factors, jt, jt.root, msgs)
         full = jnp.zeros(
             (self.tables[group_by].capacity, counts.shape[1]), counts.dtype
         ).at[jnp.asarray(self.live_rows(group_by), jnp.int32)].set(counts)
@@ -307,8 +332,11 @@ class MaintainedScorer:
         edge re-emitted) — the benchmark baseline for the edge-count and
         latency ratios.  Does not touch the cached messages."""
         jt = self.state.jt(group_by)
-        msgs = self._sp.messages(self._sem, self.factors, jt=jt)
-        counts = self._sp.node_factor(self._sem, self.factors, jt, jt.root, msgs)
+        with spmd.use_data_mesh(self.mesh):
+            msgs = self._sp.messages(self._sem, self.factors, jt=jt)
+        counts = spmd.replicate(
+            self._sp.node_factor(self._sem, self.factors, jt, jt.root, msgs),
+            self.mesh)
         tot = (counts @ self.leaf_values).astype(jnp.float32)
         cnt = jnp.sum(counts[:, :self.tree0_leaves], axis=1).astype(jnp.float32)
         return tot, cnt

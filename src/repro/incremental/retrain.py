@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..obs import get_registry, span
+from ..distributed import spmd
 from ..core.engine import QueryEngine
 from ..core.schema import Schema
 from ..core.semiring import Arithmetic, PolyFreq
@@ -62,7 +63,17 @@ from .state import DynamicState, TableChange
 
 
 class MaintainedEngine(QueryEngine):
-    """Grouped boosting queries answered from maintained messages."""
+    """Grouped boosting queries answered from maintained messages.
+
+    Sharding: captures the ambient `spmd` data mesh at construction.
+    The capacity-shaped query bases (`_c3_base`, `_cnt_base`, sketch
+    monomials, feature matrices) are placed row-sharded on rebuild —
+    the engine is eager (host-orchestrated), so device placement sticks
+    without in-graph constraints — and the memoized message pass's
+    emissions are the collective point.  Grouped outputs replicate at
+    the engine boundary, so signatures, cache keys and the split sweep
+    are identical to single-device.
+    """
 
     jittable = False          # signatures hash concrete mask bytes
     analytic_edges = False    # every real emission is counted here
@@ -72,6 +83,7 @@ class MaintainedEngine(QueryEngine):
                  max_cache_per_edge: int = 64):
         self.state = state
         self.counter = counter
+        self.mesh = spmd.current_data_mesh()
         self.cache = MessageCache(max_per_edge=max_cache_per_edge)
         self._version: Dict[str, int] = {n: 0 for n in state.tables}
         self._stale = set(state.tables)
@@ -174,23 +186,26 @@ class MaintainedEngine(QueryEngine):
             )
         else:
             fm = np.zeros((cap, 0), np.float32)
-        self._featmat[name] = jnp.asarray(fm)
+        self._featmat[name] = spmd.shard_rows(jnp.asarray(fm), self.mesh)
         ones = live.astype(jnp.float32)
-        self._cnt_base[name] = ones
+        self._cnt_base[name] = spmd.shard_rows(ones, self.mesh)
         if name == schema.label_table:
             lbl_np = dt.columns[schema.label_column][:cap].astype(np.float32)
             lbl_np = np.where(live_np, lbl_np, 0.0)
             lbl = jnp.asarray(lbl_np)
-            self._c3_base[name] = jnp.stack([ones, lbl, jnp.square(lbl)], -1)
+            self._c3_base[name] = spmd.shard_rows(
+                jnp.stack([ones, lbl, jnp.square(lbl)], -1), self.mesh)
         else:
             lbl = None
-            self._c3_base[name] = self.c3.mask(self.c3.ones((cap,)), live)
+            self._c3_base[name] = spmd.shard_rows(
+                self.c3.mask(self.c3.ones((cap,)), live), self.mesh)
         h = self.hashes.hashes[name]
         w = jnp.asarray(self._w_ids[name][:cap])
         mono = monomial_freq if isinstance(self.sem, PolyFreq) else monomial_coeff
         m = self.sem.mask(mono(self.sem, h.sign(w), h.bucket(w)), live)
-        self._sk_base[name] = m
-        self._sk_label[name] = self.sem.scale(m, lbl) if lbl is not None else m
+        self._sk_base[name] = spmd.shard_rows(m, self.mesh)
+        self._sk_label[name] = (spmd.shard_rows(self.sem.scale(m, lbl), self.mesh)
+                                if lbl is not None else self._sk_base[name])
 
     # ------------------------------------------------------------- queries --
     def _combine(self, name: str, mask, extra):
@@ -212,7 +227,8 @@ class MaintainedEngine(QueryEngine):
         K = next(iter(keeps.values())).shape[0]
         factors, sigs = {}, {}
         with span("engine.grouped", table=table,
-                  kind=kinds if isinstance(kinds, str) else "sk"):
+                  kind=kinds if isinstance(kinds, str) else "sk"), \
+                spmd.use_data_mesh(self.mesh):
             for name, keep in keeps.items():
                 k_np = np.asarray(keep)
                 uniform = K == 1 or bool((k_np == k_np[:1]).all())
@@ -222,7 +238,11 @@ class MaintainedEngine(QueryEngine):
                 sigs[name] = (kind, self._version[name], rows.shape[0], digest)
                 factors[name] = sem.mask(bases[name][None], jnp.asarray(rows))
             msgs = self.sp.messages_memo(sem, factors, jt, sigs, self.cache)
-            out = self.sp.node_factor(sem, factors, jt, jt.root, msgs)
+            # replicate at the engine boundary: the split sweep downstream
+            # must see the same bits/layout as single-device
+            out = spmd.replicate(
+                self.sp.node_factor(sem, factors, jt, jt.root, msgs),
+                self.mesh)
         if out.shape[0] != K:
             out = jnp.broadcast_to(out, (K,) + out.shape[1:])
         return out
@@ -320,6 +340,7 @@ class IncrementalBooster:
         self.state = DynamicState(schema, slack=slack)
         self.engine = MaintainedEngine(self.state, counter=counter,
                                        max_cache_per_edge=max_cache_per_edge)
+        self.mesh = self.engine.mesh          # ambient spmd mesh, if any
         self.booster = Booster(schema, cfg, key=key, engine=self.engine)
         # one counter for everything: analytic query counts from the
         # trainer, real edge emissions from the engine

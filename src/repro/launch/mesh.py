@@ -25,3 +25,25 @@ def make_host_mesh():
             model = m
             break
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_data_mesh(n: int | None = None):
+    """1-D ("data",) mesh over the first `n` devices (all by default).
+
+    This is the mesh the relational engine shards over: factors/featmats
+    split by rows along "data", per-edge SumProd messages ⊕-combined
+    across it (see `distributed.spmd`).  Install with
+    `spmd.use_data_mesh(make_data_mesh())`.  CPU-only proof recipe:
+    set `XLA_FLAGS=--xla_force_host_platform_device_count=8` before the
+    first jax import (the launch CLIs' `--devices` flag does this).
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if n is not None:
+        if n > len(devs):
+            raise ValueError(
+                f"requested {n} mesh devices but only {len(devs)} visible "
+                f"(use --devices / XLA_FLAGS to force host devices first)")
+        devs = devs[:n]
+    return jax.sharding.Mesh(np.asarray(devs), ("data",))

@@ -11,8 +11,17 @@ effective live tables — reporting MSE parity and the segment-⊕ edge
 emissions both routes spent (the queries-avoided ratio).
 
     PYTHONPATH=src python -m repro.launch.retrain_stream --batches 8
+
+Sharded retraining: `--devices 8 --mesh 8` forces 8 host XLA devices
+(before any jax import — hence the leading _devices import) and runs
+the maintained engine's query bases row-sharded over a ("data",) mesh.
 """
 from __future__ import annotations
+
+from repro.launch._devices import (          # noqa: I001  (must precede
+    add_device_args, apply_early_device_flags, resolve_mesh)   # jax imports)
+
+apply_early_device_flags()
 
 import argparse
 import time
@@ -21,6 +30,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import BoostConfig, Booster, materialize_join, predict_rows
+from repro.distributed import spmd
 from repro.incremental import IncrementalBooster
 from repro.obs import (
     FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
@@ -98,16 +108,21 @@ def main(argv=None):
     ap.add_argument("--sample", metavar="PATH", default=None,
                     help="append periodic metric-snapshot deltas to this JSONL")
     ap.add_argument("--sample-interval", type=float, default=1.0)
+    add_device_args(ap)
     args = ap.parse_args(argv)
 
     if args.trace:
         enable_tracing()
 
+    mesh = resolve_mesh(args)
     schema = build_schema(args)
     cfg = BoostConfig(n_trees=args.trees, depth=args.depth, mode="sketch",
                       ssr_mode="off", seed=args.seed,
                       split_mode=args.split_mode, hist_bins=args.hist_bins)
-    ib = IncrementalBooster(schema, cfg)
+    with spmd.use_data_mesh(mesh):
+        ib = IncrementalBooster(schema, cfg)
+    if mesh is not None:
+        print(f"data-parallel over {spmd.data_axis_size(mesh)} devices")
     t0 = time.perf_counter()
     ib.fit()
     print(f"initial fit: {len(ib.trees)} trees in "

@@ -8,8 +8,17 @@ keep).  Ends with a hot-swap: a refreshed model is published mid-traffic
 and new requests pick it up with zero downtime.
 
     PYTHONPATH=src python -m repro.launch.serve_relational --requests 2000
+
+Sharded serving: `--devices 8 --mesh 8` forces 8 host XLA devices (set
+before any jax import — that's why the _devices import leads) and
+compiles the ensemble with row-sharded factors over a ("data",) mesh.
 """
 from __future__ import annotations
+
+from repro.launch._devices import (          # noqa: I001  (must precede
+    add_device_args, apply_early_device_flags, resolve_mesh)   # jax imports)
+
+apply_early_device_flags()
 
 import argparse
 import asyncio
@@ -18,6 +27,7 @@ import time
 import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
+from repro.distributed import spmd
 from repro.obs import (
     FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
     enable_tracing, format_summary_table, get_registry, get_tracer,
@@ -84,12 +94,13 @@ async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
     print(f"batches: {snap['batches']} (mean size {snap['mean_batch']:.1f}), "
           f"cache hit rate {100 * snap['cache_hit_rate']:.1f}%")
 
-    # hot swap: publish a refreshed model mid-traffic (same kernel route
-    # and query accounting as v1)
-    v2 = registry.publish(compile_ensemble(
-        schema, train(schema, args, seed=7),
-        use_kernel=args.kernel, counter=counter,
-    ))
+    # hot swap: publish a refreshed model mid-traffic (same kernel route,
+    # query accounting and mesh placement as v1)
+    with spmd.use_data_mesh(getattr(args, "_mesh", None)):
+        v2 = registry.publish(compile_ensemble(
+            schema, train(schema, args, seed=7),
+            use_kernel=args.kernel, counter=counter,
+        ))
     more = rng.integers(0, n_rows, 64)
     try:
         out = await service.score_many(more.tolist())
@@ -147,18 +158,25 @@ def main(argv=None):
                     help="append periodic metric-snapshot deltas to this "
                          "JSONL time series")
     ap.add_argument("--sample-interval", type=float, default=1.0)
+    add_device_args(ap)
     args = ap.parse_args(argv)
 
     if args.trace:
         enable_tracing()
 
+    mesh = resolve_mesh(args)
+    args._mesh = mesh                       # drive()'s hot-swap recompile
     schema = build_schema(args)
-    trees = train(schema, args)
-    counter = QueryCounter()
-    ens = compile_ensemble(schema, trees, use_kernel=args.kernel, counter=counter)
+    with spmd.use_data_mesh(mesh):
+        trees = train(schema, args)
+        counter = QueryCounter()
+        ens = compile_ensemble(schema, trees, use_kernel=args.kernel,
+                               counter=counter)
     group = schema.label_table
     print(f"compiled ensemble: {ens.n_trees} trees, {ens.total_leaves} stacked "
-          f"leaves over {schema.n_tables} tables (group_by={group})")
+          f"leaves over {schema.n_tables} tables (group_by={group})"
+          + (f" [data-parallel over {spmd.data_axis_size(mesh)} devices]"
+             if mesh is not None else ""))
 
     slo = None
     if args.slo:

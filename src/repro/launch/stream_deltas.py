@@ -10,8 +10,17 @@ on the effective live tables).  Reports per-batch maintenance latency,
 the segment-⊕ edge ratio vs full recompute, and the audit verdict.
 
     PYTHONPATH=src python -m repro.launch.stream_deltas --batches 20
+
+Sharded maintenance: `--devices 8 --mesh 8` forces 8 host XLA devices
+(before any jax import — hence the leading _devices import) and keeps
+the capacity-padded factors row-sharded over a ("data",) mesh.
 """
 from __future__ import annotations
+
+from repro.launch._devices import (          # noqa: I001  (must precede
+    add_device_args, apply_early_device_flags, resolve_mesh)   # jax imports)
+
+apply_early_device_flags()
 
 import argparse
 import time
@@ -19,6 +28,7 @@ import time
 import numpy as np
 
 from repro.core import BoostConfig, Booster, QueryCounter
+from repro.distributed import spmd
 from repro.incremental import MaintainedScorer
 from repro.obs import (
     FlightRecorder, PeriodicSampler, SLOMonitor, TelemetryServer,
@@ -74,16 +84,20 @@ def main(argv=None):
     ap.add_argument("--sample", metavar="PATH", default=None,
                     help="append periodic metric-snapshot deltas to this JSONL")
     ap.add_argument("--sample-interval", type=float, default=1.0)
+    add_device_args(ap)
     args = ap.parse_args(argv)
 
+    mesh = resolve_mesh(args)
     schema = build_schema(args)
     group = schema.label_table
     cfg = BoostConfig(n_trees=args.trees, depth=args.depth, mode="sketch",
                       ssr_mode="off")
-    trees, _ = Booster(schema, cfg).fit()
-
-    counter = QueryCounter()
-    ms = MaintainedScorer(compile_ensemble(schema, trees), counter=counter)
+    with spmd.use_data_mesh(mesh):
+        trees, _ = Booster(schema, cfg).fit()
+        counter = QueryCounter()
+        ms = MaintainedScorer(compile_ensemble(schema, trees), counter=counter)
+    if mesh is not None:
+        print(f"data-parallel over {spmd.data_axis_size(mesh)} devices")
     registry = ModelRegistry()
     v = registry.publish(ms)
     ms.grouped_cached(group)                      # prime the message cache

@@ -46,6 +46,16 @@ def fingerprint() -> dict:
         fp["jax"] = jax.__version__
         fp["device"] = jax.devices()[0].device_kind
         fp["backend"] = jax.default_backend()
+        # device-tagged entries: forced-host-device CI legs and real
+        # hardware runs both land with their parallel width recorded
+        fp["device_count"] = jax.device_count()
+        try:
+            from ..distributed import spmd
+            mesh = spmd.mesh_fingerprint()
+            if mesh is not None:        # active data mesh at report time
+                fp["mesh"] = mesh
+        except Exception:
+            pass
     except Exception:
         fp["jax"] = None
     return fp

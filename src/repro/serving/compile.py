@@ -36,18 +36,25 @@ from ..core.schema import Schema
 from ..core.semiring import Channels
 from ..core.sumprod import QueryCounter, SumProd
 from ..core.tree import TreeArrays, leaf_masks
+from ..distributed import spmd
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelChannels(Channels):
-    """Channels semiring whose segment-⊕ runs on the Pallas kernel."""
+    """Channels semiring whose segment-⊕ runs on the Pallas kernel.
+
+    Under an active multi-device data mesh the Pallas route falls back to
+    the dense ``segment_sum`` — `pallas_call` is a single-device program
+    and would force an all-gather of the row-sharded factor; the XLA
+    scatter path partitions cleanly instead."""
 
     interpret: bool = True
 
     def segment_add(self, vals, segment_ids, num_segments):
         from ..kernels.segment_sum.ops import segment_sum_op
 
-        if vals.ndim == 2 and vals.dtype == jnp.float32:
+        if (vals.ndim == 2 and vals.dtype == jnp.float32
+                and spmd.data_axis_size() <= 1):
             return segment_sum_op(vals, segment_ids, num_segments,
                                   interpret=self.interpret)
         return super().segment_add(vals, segment_ids, num_segments)
@@ -82,6 +89,16 @@ class CompiledEnsemble:
     ``data_version`` is bumped by whoever mutates served state in place
     (incremental/maintain.py) — caches keyed on it can never serve stale
     scores after a delta.
+
+    ``mesh``: data mesh captured at compile time (ambient
+    `spmd.current_data_mesh()` by default).  Factors are placed
+    row-sharded over its data axis and flow as jit *arguments*, so the
+    sharding sticks; leaf values replicate; the SumProd message
+    emissions inside the pass are the collective point (`psum_message`),
+    so grouped outputs come back replicated and bit-equal to
+    single-device (0/1 leaf-mask counts are integer-exact under the
+    cross-shard re-association).  ``mesh=None`` is the plain
+    single-device program.
     """
 
     schema: Schema
@@ -93,6 +110,7 @@ class CompiledEnsemble:
     counter: Optional[QueryCounter] = None
     factor_dtype: "jnp.dtype" = jnp.float32
     data_version: int = 0
+    mesh: Optional[object] = None          # jax.sharding.Mesh | None
 
     def __post_init__(self):
         self._sp = SumProd(self.schema)
@@ -102,6 +120,13 @@ class CompiledEnsemble:
         )
         self._score_fns: Dict[str, callable] = {}
         self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        if spmd.data_axis_size(self.mesh) > 1:
+            self.factors = spmd.shard_factors(self.factors, self.mesh)
+            self.leaf_values = spmd.replicate_put(self.leaf_values, self.mesh)
+
+    def device_count(self) -> int:
+        """Data-axis width this ensemble is sharded over (1 = unsharded)."""
+        return spmd.data_axis_size(self.mesh)
 
     @property
     def total_leaves(self) -> int:
@@ -122,12 +147,26 @@ class CompiledEnsemble:
         if group_by not in self._score_fns:
             sp, sem, L0 = self._sp, self._sem, self.tree0_leaves
 
+            mesh = self.mesh
+
             @jax.jit
             def run(factors, vals):
                 counts = sp(sem, factors, group_by=group_by)   # (n_g, A)
-                tot = (counts @ vals).astype(jnp.float32)
-                cnt = jnp.sum(counts[:, :L0], axis=1).astype(jnp.float32)
-                return tot, cnt
+                # contract over the (never-sharded) leaf axis as an
+                # explicitly sequenced FMA chain: each output row reads
+                # only its own counts row, so row sharding cannot move
+                # the bits — unlike a gemv, whose A-contraction blocking
+                # varies with the local row count.  The rows therefore
+                # stay sharded through the whole pass; only the two
+                # (n_g,) results are gathered back.
+                tot = counts[:, 0] * vals[0]
+                for j in range(1, int(vals.shape[0])):
+                    tot = tot + counts[:, j] * vals[j]
+                # integer-valued counts: the cnt reduction is exact in
+                # f32 in any association order
+                cnt = jnp.sum(counts[:, :L0], axis=1)
+                return (spmd.replicate(tot.astype(jnp.float32), mesh),
+                        spmd.replicate(cnt.astype(jnp.float32), mesh))
 
             self._score_fns[group_by] = run
         return self._score_fns[group_by]
@@ -136,7 +175,10 @@ class CompiledEnsemble:
         """(Σŷ, |ρ⋈J|) per row of ``group_by`` — ONE SumProd evaluation."""
         if self.counter is not None:
             self.counter.bump(1)
-        return self._score_fn(group_by)(self.factors, self.leaf_values)
+        # trace (first call) must see this ensemble's mesh — psum_message
+        # inside the pass reads the ambient context at trace time
+        with spmd.use_data_mesh(self.mesh):
+            return self._score_fn(group_by)(self.factors, self.leaf_values)
 
     def grouped_cached(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Memoized full-table scores: tables are static per model version,
@@ -152,8 +194,13 @@ def compile_ensemble(
     use_kernel: bool = False,
     counter: Optional[QueryCounter] = None,
     factor_dtype=jnp.float32,
+    mesh=None,
 ) -> CompiledEnsemble:
-    """Stack per-table leaf masks across all trees into channel factors."""
+    """Stack per-table leaf masks across all trees into channel factors.
+
+    ``mesh``: explicit data mesh, or None to capture the ambient
+    `spmd.use_data_mesh` context (still None outside any context —
+    the plain single-device program)."""
     if not trees:
         raise ValueError("cannot compile an empty ensemble")
     factors = {
@@ -170,4 +217,5 @@ def compile_ensemble(
         use_kernel=use_kernel,
         counter=counter,
         factor_dtype=factor_dtype,
+        mesh=mesh if mesh is not None else spmd.current_data_mesh(),
     )

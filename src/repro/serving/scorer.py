@@ -12,6 +12,11 @@ Three traffic shapes (all jitted under the hood):
 
 :func:`score_grouped_reference` preserves the seed per-leaf-per-tree
 loop (with analytic query accounting) as the benchmark/test baseline.
+
+Sharding: every entry point re-enters the ensemble's captured data mesh
+(`distributed.spmd`), so the bulk pass runs row-sharded for mesh-compiled
+ensembles while the outputs (and therefore the gathers `score_rows`
+serves from) are replicated — callers see identical arrays either way.
 """
 from __future__ import annotations
 
@@ -25,12 +30,21 @@ from ..core.schema import Schema
 from ..core.semiring import Arithmetic
 from ..core.sumprod import QueryCounter, SumProd
 from ..core.tree import TreeArrays, all_tables_leaf_masks, predict_rows
+from ..distributed import spmd
 from .compile import CompiledEnsemble
+
+
+def _mesh_of(ens) -> Optional[object]:
+    """Data mesh an ensemble-like object was built under (duck-typed:
+    CompiledEnsemble, MaintainedScorer and StackedEnsembles all carry
+    ``mesh``; anything without one is single-device)."""
+    return getattr(ens, "mesh", None)
 
 
 def score_grouped(ens: CompiledEnsemble, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-row-of-``group_by`` (Σ ŷ(x), count) over x ∈ ρ⋈J — one pass."""
-    return ens.score_grouped(group_by)
+    with spmd.use_data_mesh(_mesh_of(ens)):
+        return ens.score_grouped(group_by)
 
 
 @jax.jit
@@ -51,7 +65,8 @@ def score_rows(ens: CompiledEnsemble, group_by: str, row_ids) -> Tuple[jnp.ndarr
         raise IndexError(
             f"row ids out of range for table {group_by!r} (n_rows={n}): {bad.tolist()}"
         )
-    tot, cnt = ens.grouped_cached(group_by)
+    with spmd.use_data_mesh(_mesh_of(ens)):
+        tot, cnt = ens.grouped_cached(group_by)
     return _gather(tot, cnt, jnp.asarray(ids, jnp.int32))
 
 
