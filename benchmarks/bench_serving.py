@@ -19,6 +19,12 @@ scorer, plus micro-batching service throughput.
       via XLA_FLAGS), with grouped scores required bit-equal and the
       segment-⊕ edge count identical — sharding may move work, never
       change it.  Single-device runs emit the 1.0 identity point.
+  S5  snapshot isolation under concurrent ingest: a real ingest thread
+      applies deltas while the service scores, every batch dispatching
+      against an MVCC snapshot pinned at cutoff; post-run, every LRU
+      cache entry must bit-match the recompute oracle at the
+      data_version in its own key, with the SLO monitor healthy
+      end-to-end.
 
     PYTHONPATH=src python benchmarks/bench_serving.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -212,6 +218,113 @@ def s3_slo_mixed_workload(sch, trees, n_clean=8, n_spike=4, chunk=64,
     }]
 
 
+def s5_snapshot_isolation(sch, trees, n_batches=6, chunk=48, ops_per_batch=4):
+    """Concurrent ingest + serve under MVCC snapshot isolation.
+
+    A REAL ingest thread applies delta batches against the published
+    MaintainedScorer while the asyncio service scores zipf traffic with
+    the full backpressure stack on (SLO-fed admission control, queue
+    depth cap, deadline-aware batch cutoff).  Every applied version pins
+    a ``pin_oracle=True`` snapshot; after the run EVERY entry in the
+    service's LRU cache must match the full-recompute oracle at the
+    data_version in its own key, bit for bit — a single mixed-version
+    score fails the bench.  The SLO monitor must end the run healthy:
+    isolation is only interesting if it holds while latency/staleness
+    stay within objective.  The latency objective is sized for this
+    workload's worst case — every new data_version re-jits the
+    path-restricted refresh for its new message/factor shapes, so the
+    first batch per version carries a compile — which keeps admission
+    control armed without the bench shedding itself on compile spikes.
+    """
+    slo = SLOMonitor(parse_slo_spec("latency=2000ms@0.9,errors=0.05,staleness=10s"),
+                     fast_window_s=2.0, slow_window_s=8.0)
+    registry = ModelRegistry()
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    group = "fact"
+    v = registry.publish(ms)
+    # the SLO attaches after warm-up (below), so the deadline budget is
+    # passed explicitly — the cutoff must be live from the first batch
+    service = RelationalScoringService(
+        registry, group, max_batch=chunk, max_wait_ms=0.5, cache_size=8192,
+        max_queue=256, latency_budget_ms=2000.0,
+    )
+    rng = np.random.default_rng(7)
+    oracles = {}
+    n0 = sch.table(group).n_rows
+
+    import threading
+
+    async def run():
+        await service.start()
+        # warm jit + message cache, pin the version-0 oracle, THEN attach
+        # the SLO monitor so compile time doesn't burn the latency budget
+        await service.score_many(rng.integers(0, n0, chunk).tolist())
+        oracles[0] = ms.snapshot(roots=(group,), pin_oracle=True)
+        service.slo = slo
+        done = threading.Event()
+
+        def ingest():
+            # the stream is LAZY on live_rows — batches must be generated
+            # against the rows they will apply to, version by version
+            for batch in delta_stream(sch, ms.live_rows, seed=13,
+                                      n_batches=n_batches,
+                                      ops_per_batch=ops_per_batch):
+                ms.apply(batch)
+                oracles[ms.data_version] = ms.snapshot(roots=(group,),
+                                                       pin_oracle=True)
+                time.sleep(0.004)
+            done.set()
+
+        t = threading.Thread(target=ingest)
+        t.start()
+        max_stale = 0.0
+        while not done.is_set():
+            ids = np.minimum(rng.zipf(1.3, chunk) - 1, n0 - 1)
+            await service.score_many(ids.tolist())
+            max_stale = max(max_stale, service.stats.staleness_s.value)
+        t.join()
+        # one post-ingest round guarantees final-version cache entries
+        await service.score_many(rng.integers(0, n0, chunk).tolist())
+        await service.stop()
+        return max_stale
+
+    max_stale = asyncio.run(run())
+    end_state = slo.state()
+    compliance = slo.compliance("latency")
+
+    # the isolation audit: every cached score vs the oracle pinned at
+    # the data_version baked into its own cache key
+    means = {}
+    audited = 0
+    for (kv, ep, dv, row), val in service.cache._d.items():
+        assert kv == v and ep == registry.epoch(v)
+        if dv not in means:
+            tot, cnt = oracles[dv].recompute_oracle(group)
+            tot, cnt = np.asarray(tot), np.asarray(cnt)
+            means[dv] = (tot / np.maximum(cnt, np.float32(1.0))).astype(np.float32)
+        assert val == float(means[dv][row]), (
+            f"cached score at data_version {dv} row {row} does not match "
+            f"its pinned recompute oracle — snapshot isolation violated")
+        audited += 1
+    assert len(means) > 1, "audit never spanned a version boundary"
+    assert end_state == "healthy", (
+        f"SLO left healthy under concurrent ingest: {end_state}")
+    assert max_stale <= 10.0, f"staleness blew the objective: {max_stale:.3f}s"
+
+    snap = service.stats_snapshot()
+    return [{
+        "bench": "S5", "deltas": n_batches, "requests": snap["requests"],
+        "versions_audited": len(means), "cache_entries_audited": audited,
+        "isolation_exact": True,
+        "mixed_latency_compliance": round(compliance, 4),
+        "latency_ms_p50": round(snap["latency_ms"]["p50"], 3),
+        "latency_ms_p99": round(snap["latency_ms"]["p99"], 3),
+        "max_staleness_s": round(max_stale, 4),
+        "end_state": end_state,
+        "errors": snap["errors"], "shed": snap["shed"],
+    }]
+
+
 def s4_sharded_scaling(n_fact=131072, n_dim=64, n_trees=4, depth=3):
     """Row-sharded vs unsharded scoring of one ensemble.
 
@@ -281,6 +394,7 @@ def run_all(fast: bool = True):
     rows += s3_slo_mixed_workload(sch, trees, n_clean=6 if fast else 10,
                                   n_spike=4 if fast else 6)
     rows += s4_sharded_scaling(n_fact=131072 if fast else 262144)
+    rows += s5_snapshot_isolation(sch, trees, n_batches=6 if fast else 12)
     return rows
 
 
@@ -297,6 +411,7 @@ def main(argv=None):
     s2 = next(r for r in rows if r["bench"] == "S2")
     s3 = next(r for r in rows if r["bench"] == "S3")
     s4 = next(r for r in rows if r["bench"] == "S4")
+    s5 = next(r for r in rows if r["bench"] == "S5")
     emit("serving", rows, {
         "eval_ratio": s1["eval_ratio"],
         "qps": s2["qps"],
@@ -306,6 +421,10 @@ def main(argv=None):
         "slo_spike_detected": 1.0 if (s3["spike_state"] != "healthy"
                                       and s3["flight_dumps"] > 0) else 0.0,
         "qps_scaling_8dev": s4["qps_scaling"],
+        "mixed_latency_compliance": s5["mixed_latency_compliance"],
+        "snapshot_isolation_exact": 1.0 if (s5["isolation_exact"]
+                                            and s5["end_state"] == "healthy")
+                                    else 0.0,
     }, config={"full": args.full, "devices": jax.device_count()})
     return rows
 

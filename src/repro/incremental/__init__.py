@@ -3,19 +3,21 @@
     TableDelta                    — typed insert/delete/update batch
     DynamicTable / DynamicEdge    — capacity-padded mutable store + keys
     DynamicState / TableChange    — shared mutable schema mirror
+    StateView                     — immutable pin of one state version
     MaintainedScorer              — delta-driven factors, path-restricted
                                     (jitted) message refresh, versioned memo
+    Snapshot                      — MVCC view pinned at one data_version
     MaintainedEngine              — boosting queries from cached messages
     IncrementalBooster            — delta-driven warm-start retraining
 """
 from .deltas import DynamicEdge, DynamicTable, TableDelta
-from .state import DynamicState, TableChange
-from .maintain import MaintainedScorer
+from .state import DynamicState, StateView, TableChange
+from .maintain import MaintainedScorer, Snapshot
 from .retrain import IncrementalBooster, MaintainedEngine, RefitReport
 
 __all__ = [
     "DynamicEdge", "DynamicTable", "TableDelta",
-    "DynamicState", "TableChange",
-    "MaintainedScorer",
+    "DynamicState", "StateView", "TableChange",
+    "MaintainedScorer", "Snapshot",
     "IncrementalBooster", "MaintainedEngine", "RefitReport",
 ]

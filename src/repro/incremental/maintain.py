@@ -33,9 +33,19 @@ stale scores are unreachable.  Row ids are slots in the capacity-padded
 store: live rows keep their ids across deltas, dead slots score as
 (0, 0) — count 0 marks "row not in the join", same as a live row whose
 key matches nothing.
+
+For CONCURRENT ingest + serve the scorer publishes MVCC
+:class:`Snapshot` views (:meth:`MaintainedScorer.snapshot`): an
+immutable pin of factors + cached messages + join trees at one
+``data_version``, captured under ``state.lock`` and served lock-free
+while ``apply`` builds the next version.  Torn reads are impossible by
+construction — a snapshot never aliases mutable state — and refreshed
+messages flow back to the live scorer when versions still agree, so
+the isolation is free of duplicate message emissions.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import time
@@ -50,7 +60,7 @@ from ..core.sumprod import QueryCounter, SumProd, refresh_plan
 from ..distributed import spmd
 from ..serving.compile import CompiledEnsemble, compile_ensemble, stack_table_factor
 from .deltas import DynamicEdge, DynamicTable, TableDelta
-from .state import DynamicState
+from .state import DynamicState, StateView
 
 
 class MaintainedScorer:
@@ -67,7 +77,8 @@ class MaintainedScorer:
     """
 
     def __init__(self, ens: CompiledEnsemble, slack: float = 0.25,
-                 counter: Optional[QueryCounter] = None):
+                 counter: Optional[QueryCounter] = None,
+                 served_window_s: float = 30.0):
         sch = ens.schema
         self.schema = sch
         self.source = ens
@@ -108,10 +119,17 @@ class MaintainedScorer:
         self._msgs: Dict[str, List[jnp.ndarray]] = {}
         self._dirty: Dict[str, Set[int]] = {}
         self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
-        # wall-clock instant of the oldest applied-but-unrefreshed delta
-        # (None = the served view is fully caught up) — the data-staleness
-        # signal the SLO monitor burns against
-        self._stale_since: Optional[float] = None
+        # wall-clock instant of the oldest applied-but-unrefreshed delta,
+        # PER ROOT (absent = that root's served view is fully caught up)
+        # — the data-staleness signal the SLO monitor burns against.  A
+        # root only counts toward the aggregate gauge while it is being
+        # served (queried within `served_window_s`): a root abandoned by
+        # traffic must not pin the staleness objective forever.
+        self._stale_since: Dict[str, float] = {}
+        self._last_query: Dict[str, float] = {}
+        self.served_window_s = served_window_s
+        # latest published MVCC snapshot (invalidated on every apply)
+        self._snap: Optional["Snapshot"] = None
 
     # ------------------------------------------------------------- queries --
     def n_rows(self, table: str) -> int:
@@ -137,7 +155,10 @@ class MaintainedScorer:
         if isinstance(deltas, TableDelta):
             deltas = [deltas]
         t0 = time.perf_counter()
-        with span("ivm.apply", n_deltas=len(deltas)):
+        # the state lock makes the whole batch one atomic version step:
+        # a concurrent snapshot() observes either none or all of it, and
+        # never a factor scatter without its data_version bump
+        with self.state.lock, span("ivm.apply", n_deltas=len(deltas)):
             for ch in self.state.apply(deltas):
                 if ch.grew:
                     cur = self.factors[ch.table]
@@ -157,26 +178,54 @@ class MaintainedScorer:
                     self._refresh_factor_rows(ch.table, ch.changed)
                 if len(ch.changed) or len(ch.deleted):
                     ti = self.schema.index[ch.table]
+                    now = time.perf_counter()
                     for root in self._msgs:
                         self._dirty.setdefault(root, set()).add(ti)
-        self._grouped.clear()
-        self.data_version += 1
-        if self._stale_since is None:
-            self._stale_since = time.perf_counter()
+                        self._stale_since.setdefault(root, now)
+            self._grouped.clear()
+            self.data_version += 1
+            self._snap = None
         reg = get_registry()
         reg.counter("ivm.deltas").inc(len(deltas))
         reg.histogram("ivm.apply_ms").observe((time.perf_counter() - t0) * 1e3)
         return self.data_version
 
-    def staleness_s(self) -> float:
-        """Wall-clock lag of the served view behind applied deltas: 0.0
-        when every cached message/grouped score reflects the current
-        ``data_version``, else seconds since the oldest unrefreshed
-        delta landed.  The serving batcher mirrors this into its
-        ``service.staleness_s`` gauge and the SLO staleness objective."""
-        if self._stale_since is None:
+    def staleness_s(self, root: Optional[str] = None) -> float:
+        """Wall-clock lag of the served view behind applied deltas.
+
+        With ``root``: 0.0 when that root's cached messages reflect the
+        current ``data_version``, else seconds since its oldest
+        unrefreshed delta landed.  Without: the max over *served* roots
+        — those queried within ``served_window_s`` — so a root traffic
+        has abandoned cannot pin the gauge (and trip the SLO staleness
+        objective) forever.  Before any root has been queried, all
+        stale roots count.  The serving batcher mirrors its group-by
+        root's reading into the ``service.staleness_s`` gauge."""
+        now = time.perf_counter()
+        if root is not None:
+            t = self._stale_since.get(root)
+            return max(0.0, now - t) if t is not None else 0.0
+        if not self._stale_since:
             return 0.0
-        return max(0.0, time.perf_counter() - self._stale_since)
+        if self._last_query:
+            candidates = [t for r, t in self._stale_since.items()
+                          if now - self._last_query.get(r, -np.inf)
+                          <= self.served_window_s]
+        else:
+            candidates = list(self._stale_since.values())
+        if not candidates:
+            return 0.0
+        return max(0.0, now - min(candidates))
+
+    def _note_fresh(self, root: str) -> None:
+        """Record that ``root``'s served view just caught up: observe
+        how long its resolved deltas sat unserved (the delta lag) and
+        re-sample the aggregate staleness gauge."""
+        t = self._stale_since.pop(root, None)
+        reg = get_registry()
+        if t is not None:
+            reg.histogram("ivm.refresh_lag_s").observe(time.perf_counter() - t)
+        reg.gauge("ivm.staleness_s").set(self.staleness_s())
 
     def _refresh_factor_rows(self, table: str, slots: np.ndarray):
         """Re-evaluate the stacked leaf masks for ``slots`` and scatter
@@ -211,18 +260,21 @@ class MaintainedScorer:
         self.factors[table] = self.factors[table].at[sl].set(frows[:k])
 
     # ------------------------------------------------------------- scoring --
-    def _refresh_fn(self, root: str, dirty: frozenset, jt):
+    def _refresh_fn(self, root: str, dirty: frozenset, jt, msgs,
+                    jt_version: int, factors):
         """Compiled path-restricted refresh for one (root, dirty-set,
         shape fingerprint); returns (jitted fn, #edges it re-emits).
         The plan is computed ONCE from :func:`refresh_plan` — the same
         source of truth the eager route uses — so the cached program
         re-emits exactly the edges the eager route would, and the edge
-        accounting (bumped eagerly by the caller) cannot drift."""
-        msgs = self._msgs[root]
+        accounting (bumped eagerly by the caller) cannot drift.
+        ``jt``/``msgs``/``jt_version``/``factors`` are explicit so MVCC
+        snapshots pinned at an older version share this compile cache:
+        a snapshot's shapes fingerprint alongside the live scorer's."""
         fingerprint = (
-            root, dirty, self.state.jt_version,
+            root, dirty, jt_version,
             tuple(m.shape for m in msgs),
-            tuple((tn, self.factors[tn].shape) for tn in sorted(self.factors)),
+            tuple((tn, factors[tn].shape) for tn in sorted(factors)),
         )
         hit = self._refresh_fns.get(fingerprint)
         if hit is not None:
@@ -263,21 +315,17 @@ class MaintainedScorer:
         elif dirty:
             t0 = time.perf_counter()
             with span("ivm.refresh", root=group_by, dirty=len(dirty)):
-                run, n_emit = self._refresh_fn(group_by, frozenset(dirty), jt)
+                run, n_emit = self._refresh_fn(
+                    group_by, frozenset(dirty), jt, self._msgs[group_by],
+                    self.state.jt_version, self.factors)
                 self._msgs[group_by] = run(self.factors, self._msgs[group_by])
             if self.counter is not None:
                 self.counter.bump_edges(n_emit)
             get_registry().histogram("ivm.refresh_ms").observe(
                 (time.perf_counter() - t0) * 1e3)
         self._dirty[group_by] = set()
-        # all roots caught up → the served view is fresh again; record
-        # how long the resolved deltas sat unserved (the delta lag)
-        if self._stale_since is not None and not any(self._dirty.values()):
-            reg = get_registry()
-            reg.histogram("ivm.refresh_lag_s").observe(
-                time.perf_counter() - self._stale_since)
-            reg.gauge("ivm.staleness_s").set(0.0)
-            self._stale_since = None
+        self._last_query[group_by] = time.perf_counter()
+        self._note_fresh(group_by)
         # replicate before the serving contraction (see score_grouped)
         return spmd.replicate(
             sp.node_factor(sem, self.factors, jt, jt.root, self._msgs[group_by]),
@@ -310,7 +358,18 @@ class MaintainedScorer:
         differently for different n, which would otherwise perturb a few
         ulps).  A jitted ``compile_ensemble(...).score_grouped`` agrees
         to allclose, not bitwise — its fused matvec reassociates."""
-        eff = self.effective_schema()
+        with self.state.lock:
+            eff = self.effective_schema()
+            live = self.live_rows(group_by)
+            cap = self.tables[group_by].capacity
+        return self._oracle_from(eff, group_by, live, cap)
+
+    def _oracle_from(self, eff: Schema, group_by: str, live, capacity: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The recompute oracle over an EXPLICIT effective schema /
+        live-slot / capacity pin — shared by :meth:`recompute_oracle`
+        (current state) and :meth:`Snapshot.recompute_oracle` (a frozen
+        historical version)."""
         # the oracle is pinned single-device (use_data_mesh(None) clears
         # any ambient mesh): ground truth must not depend on sharding
         with spmd.use_data_mesh(None):
@@ -321,11 +380,64 @@ class MaintainedScorer:
             msgs = sp.messages(fresh._sem, fresh.factors, jt=jt)
             counts = sp.node_factor(fresh._sem, fresh.factors, jt, jt.root, msgs)
         full = jnp.zeros(
-            (self.tables[group_by].capacity, counts.shape[1]), counts.dtype
-        ).at[jnp.asarray(self.live_rows(group_by), jnp.int32)].set(counts)
+            (capacity, counts.shape[1]), counts.dtype
+        ).at[jnp.asarray(live, jnp.int32)].set(counts)
         tot = (full @ fresh.leaf_values).astype(jnp.float32)
         cnt = jnp.sum(full[:, :fresh.tree0_leaves], axis=1).astype(jnp.float32)
         return tot, cnt
+
+    # ----------------------------------------------------------- snapshots --
+    def snapshot(self, roots: Optional[Sequence[str]] = None,
+                 pin_oracle: bool = False) -> "Snapshot":
+        """Publish an immutable MVCC :class:`Snapshot` of the current
+        ``data_version``.
+
+        Cheap: jax arrays are immutable (``apply`` rebinds new arrays,
+        never writes through old ones), so the factor dict and cached
+        message lists are captured by reference; the only real work is
+        join-tree materialization, cached per ``jt_version``.  The
+        result is cached until the next ``apply``, so concurrent
+        batches at one version share one snapshot.
+
+        ``roots`` limits which roots the snapshot can serve (default:
+        every table); ``pin_oracle=True`` additionally freezes the
+        effective schema + live slots so :meth:`Snapshot.recompute_oracle`
+        stays bit-exact after the live state has moved on.
+        """
+        names = (tuple(sorted(roots)) if roots is not None
+                 else tuple(t.name for t in self.schema.tables))
+        with self.state.lock:
+            snap = self._snap
+            if (snap is not None
+                    and set(names) <= set(snap.view.jts)
+                    and (not pin_oracle or snap.view.schema is not None)):
+                return snap
+            view = self.state.snapshot(names, pin_oracle=pin_oracle)
+            snap = Snapshot(
+                owner=self, view=view, data_version=self.data_version,
+                factors=dict(self.factors), leaf_values=self.leaf_values,
+                msgs={r: list(self._msgs[r]) for r in names
+                      if r in self._msgs},
+                dirty={r: frozenset(self._dirty.get(r, ())) for r in names},
+            )
+            self._snap = snap
+            return snap
+
+    def _absorb(self, root: str, data_version: int, msgs) -> None:
+        """Adopt a snapshot's refreshed messages iff the live scorer is
+        still at the snapshot's ``data_version`` — at the same version
+        the snapshot and the live scorer share one dirty set (both only
+        change under ``state.lock``), so its refresh IS the live
+        refresh: serving through snapshots stays exactly as incremental
+        as serving the scorer directly.  After the version has moved
+        on, the refresh only served that snapshot; drop it."""
+        with self.state.lock:
+            if self.data_version != data_version:
+                return
+            self._msgs[root] = list(msgs)
+            self._dirty[root] = set()
+            self._last_query[root] = time.perf_counter()
+            self._note_fresh(root)
 
     def score_full(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Full-recompute reference over the SAME maintained state (every
@@ -340,3 +452,110 @@ class MaintainedScorer:
         tot = (counts @ self.leaf_values).astype(jnp.float32)
         cnt = jnp.sum(counts[:, :self.tree0_leaves], axis=1).astype(jnp.float32)
         return tot, cnt
+
+
+class Snapshot:
+    """An immutable MVCC view of a :class:`MaintainedScorer`, pinned at
+    one ``data_version``.
+
+    Duck-types the serving surface (``n_rows`` / ``score_grouped`` /
+    ``grouped_cached`` / ``data_version`` / ``mesh``), so the
+    micro-batcher dispatches against it unchanged while the owner
+    applies the next version concurrently — reads never observe a
+    half-applied delta because everything here is frozen: the factor
+    dict and message lists were captured under ``state.lock`` and jax
+    arrays are immutable, the join trees were materialized to jnp at
+    capture.
+
+    Snapshots are *lazily consistent*: one captured with pending dirty
+    tables resolves them on first score through the owner's jitted
+    path-refresh compile cache (same :func:`refresh_plan`, same edge
+    accounting), then writes the refreshed messages back to the owner
+    iff it is still at this version (:meth:`MaintainedScorer._absorb`)
+    — so snapshot serving costs no extra message emissions over serving
+    the live scorer.  Scoring a root outside the pinned set raises
+    ``KeyError``.
+    """
+
+    def __init__(self, owner: MaintainedScorer, view: StateView,
+                 data_version: int, factors, leaf_values, msgs, dirty):
+        self._owner = owner
+        self.view = view
+        self.data_version = data_version
+        self.jt_version = view.jt_version
+        self.factors = factors
+        self.leaf_values = leaf_values
+        self.mesh = owner.mesh
+        self._msgs = msgs           # root → message list (None until scored)
+        self._dirty = dirty         # root → frozenset of dirty table idx
+        self._grouped: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        # serializes lazy refresh within ONE snapshot; never held while
+        # taking state.lock (write-back happens after release)
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- surface --
+    def roots(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.view.jts))
+
+    def n_rows(self, table: str) -> int:
+        return self.view.capacities[table]
+
+    def _counts(self, group_by: str) -> jnp.ndarray:
+        jt = self.view.jt(group_by)              # KeyError if not pinned
+        o = self._owner
+        sem, sp = o._sem, o._sp
+        with self._lock:
+            msgs = self._msgs.get(group_by)
+            dirty = self._dirty.get(group_by, frozenset())
+            if msgs is None:
+                with spmd.use_data_mesh(self.mesh):
+                    msgs = sp.messages(sem, self.factors, jt=jt)
+            elif dirty:
+                t0 = time.perf_counter()
+                with span("ivm.refresh", root=group_by, dirty=len(dirty)):
+                    run, n_emit = o._refresh_fn(
+                        group_by, dirty, jt, msgs, self.jt_version,
+                        self.factors)
+                    msgs = run(self.factors, msgs)
+                if o.counter is not None:
+                    o.counter.bump_edges(n_emit)
+                get_registry().histogram("ivm.refresh_ms").observe(
+                    (time.perf_counter() - t0) * 1e3)
+            self._msgs[group_by] = msgs
+            self._dirty[group_by] = frozenset()
+        o._absorb(group_by, self.data_version, msgs)
+        return spmd.replicate(
+            sp.node_factor(sem, self.factors, jt, jt.root, msgs), self.mesh)
+
+    def score_grouped(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(Σŷ, |ρ⋈J|) per slot at this snapshot's pinned version —
+        identical contraction (and bits) to the owner at this version."""
+        o = self._owner
+        if o.counter is not None:
+            o.counter.bump(1)
+        counts = self._counts(group_by)
+        tot = (counts @ self.leaf_values).astype(jnp.float32)
+        cnt = jnp.sum(counts[:, :o.tree0_leaves], axis=1).astype(jnp.float32)
+        return tot, cnt
+
+    def grouped_cached(self, group_by: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        with self._lock:
+            hit = self._grouped.get(group_by)
+        if hit is None:
+            hit = self.score_grouped(group_by)
+            with self._lock:
+                hit = self._grouped.setdefault(group_by, hit)
+        return hit
+
+    def recompute_oracle(self, group_by: str
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Ground-truth full recompute AT THIS PINNED VERSION — works
+        even after the live state has moved on.  Requires the snapshot
+        to have been taken with ``pin_oracle=True``."""
+        if self.view.schema is None:
+            raise ValueError(
+                "snapshot was not captured with pin_oracle=True; "
+                "no frozen effective schema to recompute from")
+        return self._owner._oracle_from(
+            self.view.schema, group_by,
+            self.view.live[group_by], self.view.capacities[group_by])

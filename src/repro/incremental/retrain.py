@@ -165,10 +165,13 @@ class MaintainedEngine(QueryEngine):
                     self._assign_proj(ch.table, ch.changed)
 
     def refresh(self):
-        """Rebuild the query bases of stale tables (no-op when clean)."""
+        """Rebuild the query bases of stale tables (no-op when clean).
+        Holds the state lock: the rebuild reads live bits / feature
+        columns that a concurrent ``state.apply`` mutates in place, and
+        a torn base would poison the signature-keyed message cache."""
         if not self._stale:
             return
-        with span("engine.refresh", tables=len(self._stale)):
+        with self.state.lock, span("engine.refresh", tables=len(self._stale)):
             for name in sorted(self._stale):
                 self._rebuild(name)
             self._stale.clear()
@@ -223,7 +226,11 @@ class MaintainedEngine(QueryEngine):
         single broadcast row, making their signatures (and cached
         messages) independent of the level's node count K.  ``kinds``:
         base-identity tag per table (str applies to every table)."""
-        jt = self.state.jt(table)
+        with self.state.lock:
+            # materialize under the lock (jt() splices mutable numpy key
+            # ids into immutable jnp arrays); the pass below then runs on
+            # frozen bases/trees only
+            jt = self.state.jt(table)
         K = next(iter(keeps.values())).shape[0]
         factors, sigs = {}, {}
         with span("engine.grouped", table=table,
@@ -305,12 +312,13 @@ class MaintainedEngine(QueryEngine):
         host work, never a full-table scan.  Deltas applied before the
         booster bound (and built full plans) may linger here; re-binning
         them is idempotent."""
-        dirty, self._plan_dirty = self._plan_dirty, {}
-        out = {}
-        for name, chunks in dirty.items():
-            slots = np.unique(np.concatenate(chunks))
-            out[name] = (slots, self.state.feature_rows(name, slots))
-        return out
+        with self.state.lock:
+            dirty, self._plan_dirty = self._plan_dirty, {}
+            out = {}
+            for name, chunks in dirty.items():
+                slots = np.unique(np.concatenate(chunks))
+                out[name] = (slots, self.state.feature_rows(name, slots))
+            return out
 
 
 @dataclasses.dataclass
@@ -366,12 +374,31 @@ class IncrementalBooster:
         get_registry().counter("retrain.deltas").inc(len(deltas))
         return self.state.data_version
 
-    def staleness_s(self) -> float:
+    def staleness_s(self, root: Optional[str] = None) -> float:
         """Seconds the model has been behind applied deltas (0.0 once a
-        refit/drift check has consumed them)."""
+        refit/drift check has consumed them).  ``root`` is accepted for
+        surface-compatibility with :class:`MaintainedScorer` (the
+        serving batcher passes its group-by root) — model freshness
+        here is global, so it is ignored."""
         if self._stale_since is None:
             return 0.0
         return max(0.0, time.perf_counter() - self._stale_since)
+
+    def compile_snapshot(self):
+        """Publish the current ensemble as a static
+        :class:`~repro.serving.compile.CompiledEnsemble` pinned at the
+        store's ``data_version`` — an immutable scoring artifact over
+        the live rows at this instant, safe to hand to a
+        :class:`~repro.serving.service.ModelRegistry` while training
+        continues to mutate the shared state.  Captured under the state
+        lock so the effective schema and the version agree."""
+        from ..serving.compile import compile_ensemble
+        with self.state.lock:
+            eff = self.state.effective_schema()
+            dv = self.state.data_version
+        ens = compile_ensemble(eff, self.trees)
+        ens.data_version = dv
+        return ens
 
     def _mark_fresh(self) -> None:
         """Model state re-evaluated against every applied delta: record

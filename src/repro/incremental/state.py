@@ -18,11 +18,20 @@ records; what to DO about a change is the consumer's business:
   so cached boosting messages retire exactly where data changed.
   Consumers that cache derived artifacts MUST subscribe rather than
   poll; a direct ``state.apply`` then cannot leave them stale.
+
+Concurrency: the state owns a reentrant ``lock`` serializing mutation
+against snapshot capture.  :meth:`apply` holds it for the whole batch
+(listeners included), so a :class:`StateView` taken under the same lock
+can never observe a half-applied delta — the consistency point MVCC
+snapshots (incremental/maintain.py) build on.  Reads of pinned views
+then run lock-free: everything a view holds is immutable (jnp arrays,
+frozen join trees, copied numpy).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Set, Tuple
+import threading
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -40,6 +49,36 @@ class TableChange:
     deleted: np.ndarray      # slots whose live bit was cleared
     n_inserted: int          # count of trailing insert slots in ``changed``
     grew: bool               # capacity grew (factor arrays need padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class StateView:
+    """An immutable pin of one :class:`DynamicState` version.
+
+    Captured atomically under ``state.lock``: the version pair, the
+    per-root join trees materialized at capture time (materialization
+    matters — ``DynamicEdge.ids`` are numpy arrays mutated in place by
+    later ``apply`` calls, but :meth:`DynamicState.jt` converts them to
+    immutable jnp arrays), per-table capacities, and — when pinned for
+    oracle use — a frozen effective schema plus live-slot arrays so a
+    full recompute at exactly this version stays possible after the
+    live state has moved on.
+    """
+
+    data_version: int
+    jt_version: int
+    jts: Dict[str, JoinTree]
+    capacities: Dict[str, int]
+    schema: Optional[Schema] = None          # effective schema (oracle pin)
+    live: Optional[Dict[str, np.ndarray]] = None  # live slots per table
+
+    def jt(self, root: str) -> JoinTree:
+        if root not in self.jts:
+            raise KeyError(
+                f"root {root!r} not pinned in this view "
+                f"(pinned: {sorted(self.jts)})"
+            )
+        return self.jts[root]
 
 
 class DynamicState:
@@ -61,6 +100,10 @@ class DynamicState:
         self._jts: Dict[str, JoinTree] = {}
         self._jt_built_at: Dict[str, int] = {}
         self._listeners: List = []
+        # Reentrant: apply() holds it across listener callbacks, and a
+        # listener may legitimately take a snapshot of the state it is
+        # being notified about.
+        self.lock = threading.RLock()
 
     def subscribe(self, fn) -> None:
         """Register a change listener: ``fn(changes)`` is called after
@@ -110,16 +153,42 @@ class DynamicState:
         edges = []
         for e in base.edges:
             de = self.edges[frozenset((names[e.child], names[e.parent]))]
+            # .copy() is load-bearing: jnp.asarray of a same-dtype numpy
+            # array is ZERO-COPY on CPU, and DynamicEdge.assign mutates
+            # `ids` in place — without the copy a pinned join tree's id
+            # arrays change under a concurrent reader (a reused slot's
+            # contribution migrates to the wrong segment: a torn read)
             edges.append(TreeEdge(
                 child=e.child, parent=e.parent, key_cols=e.key_cols,
-                child_ids=jnp.asarray(de.ids[names[e.child]], jnp.int32),
-                parent_ids=jnp.asarray(de.ids[names[e.parent]], jnp.int32),
+                child_ids=jnp.asarray(de.ids[names[e.child]].copy(), jnp.int32),
+                parent_ids=jnp.asarray(de.ids[names[e.parent]].copy(), jnp.int32),
                 n_keys=de.n_keys,
             ))
         jt = JoinTree(root=base.root, edges=tuple(edges))
         self._jts[root] = jt
         self._jt_built_at[root] = self.jt_version
         return jt
+
+    def snapshot(self, roots: Sequence[str], pin_oracle: bool = False) -> StateView:
+        """Pin an immutable :class:`StateView` at the current version.
+
+        ``roots`` selects which join trees to materialize; with
+        ``pin_oracle=True`` the effective schema and live-slot arrays
+        are frozen too (copied — ``DynamicTable.live`` mutates in
+        place), enabling bit-exact full recompute at this version
+        arbitrarily far in the future.
+        """
+        with self.lock:
+            jts = {r: self.jt(r) for r in roots}
+            caps = {t: dt.capacity for t, dt in self.tables.items()}
+            sch = live = None
+            if pin_oracle:
+                sch = self.effective_schema()
+                live = {t: dt.live_slots().copy() for t, dt in self.tables.items()}
+            return StateView(
+                data_version=self.data_version, jt_version=self.jt_version,
+                jts=jts, capacities=caps, schema=sch, live=live,
+            )
 
     # -------------------------------------------------------------- deltas --
     def apply(self, deltas: Sequence[TableDelta]) -> List[TableChange]:
@@ -129,6 +198,10 @@ class DynamicState:
         and ``data_version`` once per batch."""
         if isinstance(deltas, TableDelta):
             deltas = [deltas]
+        with self.lock:
+            return self._apply_locked(deltas)
+
+    def _apply_locked(self, deltas: Sequence[TableDelta]) -> List[TableChange]:
         changes: List[TableChange] = []
         structural = False
         for d in deltas:

@@ -33,6 +33,12 @@ class StackedEnsembles:
 
     def __post_init__(self):
         self.schema = self.ensembles[0].schema
+        # pin the constituents' data_versions at stack time: the stacked
+        # factor set is immutable, and scores computed from it belong to
+        # exactly these versions even if a constituent MaintainedScorer-
+        # derived ensemble is later replaced under the same registry slot
+        self.data_versions = tuple(
+            getattr(e, "data_version", 0) for e in self.ensembles)
         self._sp = SumProd(self.schema)
         self._sem = Channels(int(self.leaf_values.shape[0]),
                              self.factors[self.schema.names[0]].dtype)

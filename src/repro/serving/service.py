@@ -9,12 +9,22 @@ traffic before it ever reaches the queue.
 
 Model lifecycle: a :class:`ModelRegistry` holds versioned
 :class:`CompiledEnsemble`s; ``publish`` atomically installs a freshly
-boosted model as latest — in-flight requests keep the version they were
-enqueued with, new requests pick up the swap (zero-downtime hot swap).
-A published model may also be a ``MaintainedScorer`` whose state mutates
-in place under table deltas: the result cache is namespaced by
-(registry version, model ``data_version``, row id), so neither hot swaps
-nor delta updates can ever resurface a stale cached score.
+boosted model as latest and ``swap`` replaces the model at an existing
+slot — in-flight requests keep the version they were enqueued with, new
+requests pick up the change (zero-downtime hot swap).  A published model
+may also be a ``MaintainedScorer`` whose state mutates in place under
+table deltas: each batch then dispatches against an MVCC ``Snapshot``
+pinned at batch cutoff, and the result cache is namespaced by (registry
+version, slot install epoch, pinned ``data_version``, row id) — so hot
+swaps, slot reuse, and concurrent delta ingest can never resurface (or
+mis-file) a cached score.
+
+Backpressure, outermost-first: queue-depth admission control (shed past
+``max_queue`` while the SLO burns, or past the 4× hard cap), burn-rate
+load shedding (``unhealthy`` ⇒ :class:`ServiceOverloadedError`), and a
+deadline-aware batch cutoff (the coalescing window closes early when the
+oldest queued request would otherwise spend more than ``deadline_frac``
+of its latency budget waiting).
 """
 from __future__ import annotations
 
@@ -87,15 +97,45 @@ class ModelRegistry:
         self._latest: Optional[int] = None
         self._ids = itertools.count(1)
         self._stacked_cache = None
+        # per-slot install epoch (monotonic across the registry): bumps
+        # whenever a version slot's MODEL changes — publish or in-place
+        # swap — so caches keyed on (version, data_version) alone cannot
+        # serve model A's scores for model B after a hot swap when both
+        # happen to report the same data_version (e.g. two static
+        # ensembles both defaulting to 0)
+        self._gen = 0
+        self._epochs: Dict[int, int] = {}
 
     def publish(self, ensemble: CompiledEnsemble) -> int:
         """Install a new model version and make it the serving default."""
         v = next(self._ids)
         self._models[v] = ensemble
+        self._gen += 1
+        self._epochs[v] = self._gen
         self._latest = v
         while len(self._models) > self.max_versions:
-            self._models.pop(min(self._models))
+            old = min(self._models)
+            self._models.pop(old)
+            self._epochs.pop(old, None)
         return v
+
+    def swap(self, version: int, ensemble: CompiledEnsemble) -> int:
+        """Hot-swap the model AT an existing version slot (in-place
+        patch / canary rollback).  The slot's epoch bumps, invalidating
+        every cache keyed through :meth:`epoch` — in-flight requests
+        pinned to the slot pick up the new model at their next batch."""
+        if version not in self._models:
+            raise KeyError(f"version {version} not resident")
+        self._models[version] = ensemble
+        self._gen += 1
+        self._epochs[version] = self._gen
+        return version
+
+    def epoch(self, version: int) -> int:
+        """Install epoch of the model currently at ``version`` — a
+        registry-wide monotonic id that distinguishes successive
+        occupants of one slot."""
+        return self._epochs[version]
 
     def latest_version(self) -> int:
         if self._latest is None:
@@ -112,11 +152,15 @@ class ModelRegistry:
     def stacked(self, versions: Optional[List[int]] = None):
         """All (or the given) resident variants fused into one factor set
         for single-pass A/B scoring (see serving/multi.py).  Cached until
-        the participating versions or their data_versions change."""
+        the participating versions, their install epochs, or their
+        data_versions change — the epoch term is what keeps two distinct
+        models that both report data_version 0 apart across a swap."""
         from .multi import stack_ensembles
 
         vs = tuple(self.versions() if versions is None else versions)
-        key = (vs, tuple(getattr(self._models[v], "data_version", 0) for v in vs))
+        key = (vs,
+               tuple(self._epochs[v] for v in vs),
+               tuple(getattr(self._models[v], "data_version", 0) for v in vs))
         if self._stacked_cache is None or self._stacked_cache[0] != key:
             self._stacked_cache = (key, stack_ensembles([self._models[v] for v in vs]))
         return self._stacked_cache[1]
@@ -241,6 +285,9 @@ class RelationalScoringService:
         slo=None,                        # SLOMonitor, optional
         flight=None,                     # FlightRecorder, optional
         shed_when_unhealthy: bool = True,
+        latency_budget_ms: Optional[float] = None,
+        deadline_frac: float = 0.5,
+        max_queue: Optional[int] = None,
     ):
         self.registry = registry
         self.group_by = group_by
@@ -253,6 +300,24 @@ class RelationalScoringService:
         self.slo = slo
         self.flight = flight
         self.shed_when_unhealthy = shed_when_unhealthy
+        # per-request latency budget (seconds) for the deadline-aware
+        # batch cutoff: explicit, else the tightest latency objective on
+        # the attached SLO monitor, else none (pure max_wait coalescing).
+        # Only deadline_frac of the budget may be spent waiting in the
+        # coalescing window — the remainder is reserved for execution.
+        if latency_budget_ms is not None:
+            self.latency_budget = latency_budget_ms / 1e3
+        else:
+            budgets = [o.target / 1e3
+                       for o in getattr(slo, "objectives", {}).values()
+                       if o.kind == "latency"]
+            self.latency_budget = min(budgets) if budgets else None
+        self.deadline_frac = deadline_frac
+        # queue-depth admission control: past max_queue while the SLO is
+        # burning (state != healthy), or past the 4× hard cap regardless,
+        # new requests shed with ServiceOverloadedError instead of
+        # compounding everyone's queue wait.  None disables.
+        self.max_queue = max_queue
         self._q: "asyncio.Queue" = asyncio.Queue()
         self._task: Optional["asyncio.Task"] = None
 
@@ -312,11 +377,28 @@ class RelationalScoringService:
             raise ServiceOverloadedError(
                 f"load shed: SLO state unhealthy "
                 f"(burn rates over budget; see /healthz)")
+        # queue-depth backpressure: a deep queue while the SLO burns
+        # means arrivals outpace dispatch — admitting more only moves
+        # the miss to a slower failure.  The 4× hard cap bounds memory
+        # and worst-case queue wait even without an SLO verdict.
+        if self.max_queue is not None:
+            depth = self._q.qsize()
+            burning = (self.slo is not None
+                       and self.slo.state() != "healthy")
+            if depth >= 4 * self.max_queue or (burning and depth >= self.max_queue):
+                self.stats._shed.inc()
+                raise ServiceOverloadedError(
+                    f"load shed: queue depth {depth} over "
+                    f"{'hard cap' if depth >= 4 * self.max_queue else 'limit'} "
+                    f"(max_queue={self.max_queue})")
         self.stats._requests.inc()
-        # cache key includes the model's data_version: delta maintenance
-        # mutates a published MaintainedScorer in place, and a stale hit
-        # across that bump would serve pre-delta scores
-        cached = self.cache.get((v, getattr(ens, "data_version", 0), row_id))
+        # cache key includes the slot's install epoch AND the model's
+        # data_version: delta maintenance mutates a published
+        # MaintainedScorer in place (dv bump), and a hot swap replaces
+        # the model at this version outright (epoch bump) — a stale hit
+        # across either would serve the wrong model's scores
+        cached = self.cache.get(
+            (v, self.registry.epoch(v), getattr(ens, "data_version", 0), row_id))
         if cached is not None:
             self.stats._cache_hits.inc()
             self._observe_latency((time.perf_counter() - t0) * 1e3)
@@ -350,25 +432,34 @@ class RelationalScoringService:
 
     # -------------------------------------------------------------- batcher --
     async def _collect(self) -> Optional[List[_Request]]:
-        """One coalescing window: first request opens the batch, then fill
-        until max_batch or the max_wait deadline."""
+        """One coalescing window: first request opens the batch, then
+        fill until max_batch, the max_wait deadline, or — deadline-aware
+        cutoff — the instant the OLDEST queued request would otherwise
+        spend more than ``deadline_frac`` of its latency budget waiting.
+        All clocks are ``time.perf_counter`` (the ``t_enq`` clock)."""
         first = await self._q.get()
         if first is None:
             return None
         batch = [first]
-        loop = asyncio.get_running_loop()
         # overload signal: once degraded, queue wait is compounding the
         # tail — stop holding batches open and drain greedily instead
         wait = self.max_wait
         if self.slo is not None and self.slo.state() != "healthy":
             wait = 0.0
-        deadline = loop.time() + wait
+        deadline = time.perf_counter() + wait
+        if self.latency_budget is not None:
+            deadline = min(
+                deadline,
+                first.t_enq + self.latency_budget * self.deadline_frac)
         while len(batch) < self.max_batch:
             try:                             # greedy drain: no await overhead
                 item = self._q.get_nowait()
             except asyncio.QueueEmpty:
-                timeout = deadline - loop.time()
-                if timeout <= 0:
+                # clamp at 0: under load (or with the oldest request
+                # already past its cutoff) the deadline is in the past,
+                # and wait_for must never see a negative timeout
+                timeout = max(0.0, deadline - time.perf_counter())
+                if timeout == 0.0:
                     break
                 try:
                     item = await asyncio.wait_for(self._q.get(), timeout)
@@ -379,6 +470,18 @@ class RelationalScoringService:
                 break
             batch.append(item)
         return batch
+
+    def _frozen_view(self, ens):
+        """Pin the serving view AT batch cutoff.  A maintained model
+        publishes an MVCC snapshot — frozen factors/messages/join trees
+        at one data_version — so a concurrent ``apply()`` can neither
+        tear the gather nor slide the version between read and cache
+        write.  Static ensembles are immutable already: served as-is."""
+        snap = getattr(ens, "snapshot", None)
+        if callable(snap):
+            view = snap(roots=(self.group_by,))
+            return view, view.data_version
+        return ens, getattr(ens, "data_version", 0)
 
     def _dispatch(self, batch: List[_Request]):
         st = self.stats
@@ -391,29 +494,53 @@ class RelationalScoringService:
         with span("service.batch", size=len(batch),
                   versions=len(by_version)):
             for v, reqs in by_version.items():
-                _, ens = self.registry.get(v)
-                dv = getattr(ens, "data_version", 0)
-                # served-data staleness: the wall-clock lag this batch is
-                # about to resolve (a MaintainedScorer folds applied-but-
-                # unrefreshed deltas in during score_mean_rows below)
-                stale = getattr(ens, "staleness_s", None)
-                if callable(stale):
-                    s = stale()
-                    st.staleness_s.set(s)
-                    if self.slo is not None:
-                        self.slo.set_staleness(s)
-                ids = np.asarray([r.row_id for r in reqs], np.int32)
-                t_exec = time.perf_counter()
-                mean = np.asarray(score_mean_rows(ens, self.group_by, ids))
-                st.batch_exec_ms.observe((time.perf_counter() - t_exec) * 1e3)
-                for r, m in zip(reqs, mean):
-                    val = float(m)
-                    self.cache.put((v, dv, r.row_id), val)
-                    if not r.future.done():
-                        r.future.set_result(val)
+                # per-version isolation: one version's failure resolves
+                # only ITS requests exceptionally — co-batched requests
+                # pinned to other versions still get their scores
+                try:
+                    self._dispatch_version(v, reqs)
+                except Exception as e:
+                    st._errors.inc(len(reqs))
+                    if self.flight is not None:
+                        self.flight.observe_error(e, batch_size=len(reqs))
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(e)
         st._batches.inc()
         st._batched_rows.inc(len(batch))
         st.batch_size.observe(len(batch))
+
+    def _dispatch_version(self, v: int, reqs: List[_Request]):
+        st = self.stats
+        _, ens = self.registry.get(v)
+        ep = self.registry.epoch(v)
+        # served-data staleness of OUR root: the wall-clock lag this
+        # batch is about to resolve (the snapshot refresh below writes
+        # back to the live scorer, clearing it).  Sampled from the live
+        # model — the snapshot is frozen and has no lag of its own.
+        stale = getattr(ens, "staleness_s", None)
+        if callable(stale):
+            try:
+                s = stale(self.group_by)
+            except TypeError:            # provider without per-root lag
+                s = stale()
+            st.staleness_s.set(s)
+            if self.slo is not None:
+                self.slo.set_staleness(s)
+        # version pin happens HERE, at batch cutoff — not re-read after
+        # execution: a delta applied mid-dispatch mutates the live
+        # model, but this batch gathers from the frozen view and caches
+        # under the view's pinned data_version
+        view, dv = self._frozen_view(ens)
+        ids = np.asarray([r.row_id for r in reqs], np.int32)
+        t_exec = time.perf_counter()
+        mean = np.asarray(score_mean_rows(view, self.group_by, ids))
+        st.batch_exec_ms.observe((time.perf_counter() - t_exec) * 1e3)
+        for r, m in zip(reqs, mean):
+            val = float(m)
+            self.cache.put((v, ep, dv, r.row_id), val)
+            if not r.future.done():
+                r.future.set_result(val)
 
     async def _run(self):
         while True:

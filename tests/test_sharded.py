@@ -197,6 +197,44 @@ def test_sharded_delta_refresh_bit_equal(kind):
 
 
 @multidevice
+@pytest.mark.parametrize("kind", ["star", "snowflake"])
+def test_sharded_snapshot_reads_bit_equal(kind):
+    """MVCC snapshots under a data mesh: reads served from a pinned
+    ``Snapshot`` (lazy path-restricted refresh + write-back) must be
+    bit-equal to the single-device run at every data_version, and each
+    must match its own pinned single-device recompute oracle — snapshot
+    isolation is a concurrency feature, not a numerics fork."""
+    sch = _quantize_labels(_schema(kind))
+    group = sch.label_table
+    cfg = BoostConfig(n_trees=3, depth=3, mode="sketch", ssr_mode="off",
+                      seed=0)
+    trees, _ = Booster(sch, cfg).fit()
+
+    def run(mesh):
+        with spmd.use_data_mesh(mesh):
+            ms = MaintainedScorer(compile_ensemble(sch, trees))
+        outs = []
+        snap = ms.snapshot(roots=(group,), pin_oracle=True)
+        outs.append((snap.score_grouped(group), snap.recompute_oracle(group)))
+        for batch in generators.delta_stream(sch, ms.live_rows, seed=4,
+                                             n_batches=4, ops_per_batch=8):
+            ms.apply(batch)
+            snap = ms.snapshot(roots=(group,), pin_oracle=True)
+            outs.append((snap.score_grouped(group),
+                         snap.recompute_oracle(group)))
+        return outs
+
+    o1 = run(None)
+    oN = run(make_data_mesh())
+    for ((t1, n1), (ot1, on1)), ((tN, nN), (otN, onN)) in zip(o1, oN):
+        assert jnp.array_equal(t1, tN) and jnp.array_equal(n1, nN)
+        # the oracle is pinned single-device inside _oracle_from, so it
+        # must agree across runs AND with the snapshot reads themselves
+        assert jnp.array_equal(ot1, otN) and jnp.array_equal(on1, onN)
+        assert jnp.array_equal(t1, ot1) and jnp.array_equal(n1, on1)
+
+
+@multidevice
 def test_sharded_warm_start_refit_bit_equal():
     sch = _quantize_labels(_schema("star"))
     cfg = BoostConfig(n_trees=3, depth=3, mode="sketch", ssr_mode="off",

@@ -1,0 +1,462 @@
+"""MVCC snapshot isolation for concurrent ingest + serve.
+
+Property under test: a :class:`Snapshot` is a *pin* — whatever
+interleaving of ``apply()`` and snapshot reads occurs, every snapshot's
+scores are bit-equal to a fresh full recompute at the snapshot's pinned
+``data_version``, even long after the live state has moved on.  Plus the
+serving-side guarantees built on it: version pinning at batch cutoff,
+per-root staleness, deadline-aware coalescing with a clamped timeout,
+queue-depth admission control, and epoch-keyed hot swaps.
+
+Hypothesis-driven when available; the seeded sweeps keep tier-1
+coverage real when it is absent (tests/_hypothesis_compat.py)."""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import BoostConfig, Booster
+from repro.incremental import MaintainedScorer, Snapshot, TableDelta
+from repro.incremental.retrain import IncrementalBooster
+from repro.relational.generators import (
+    chain_schema, delta_stream, snowflake_schema, star_schema,
+)
+from repro.serving import (
+    ModelRegistry, RelationalScoringService, compile_ensemble,
+)
+from repro.serving.service import ServiceOverloadedError
+
+
+def _schema(kind, seed=11):
+    if kind == "star":
+        return star_schema(seed=seed, n_fact=120, n_dim=12)
+    if kind == "chain":
+        return chain_schema(seed=seed + 1, n_rows=60, n_tables=3, fanout=2)
+    return snowflake_schema(seed=seed + 2, n_fact=80, n_dim=8, n_sub=4)
+
+
+def _fit(sch, n_trees=2, depth=2):
+    b = Booster(sch, BoostConfig(n_trees=n_trees, depth=depth,
+                                 mode="sketch", ssr_mode="off"))
+    return b.fit()[0]
+
+
+def _scorer(kind, seed=11):
+    sch = _schema(kind, seed)
+    return sch, MaintainedScorer(compile_ensemble(sch, _fit(sch)))
+
+
+def _eq(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- interleaving property
+
+def _run_interleaving(kind, seed, n_batches=5, read_stride=2):
+    """Apply a delta stream while capturing oracle-pinned snapshots at
+    every version; interleave reads of OLD snapshots between applies;
+    then audit every snapshot — cached or re-read — bit-for-bit against
+    its own pinned recompute oracle."""
+    sch, ms = _scorer(kind, seed=seed)
+    group = sch.label_table
+    ms.grouped_cached(group)                     # warm the message cache
+    snaps = [ms.snapshot(roots=(group,), pin_oracle=True)]
+    for i, batch in enumerate(delta_stream(sch, ms.live_rows, seed=seed + 7,
+                                           n_batches=n_batches,
+                                           ops_per_batch=4)):
+        ms.apply(batch)
+        snaps.append(ms.snapshot(roots=(group,), pin_oracle=True))
+        # interleave: re-read a historical snapshot mid-stream — the
+        # read must neither see the newer version nor disturb it
+        old = snaps[i // read_stride]
+        t_old, c_old = old.grouped_cached(group)
+        ot, oc = old.recompute_oracle(group)
+        assert _eq(t_old, ot) and _eq(c_old, oc), (
+            f"snapshot v{old.data_version} drifted mid-stream ({kind})")
+    assert [s.data_version for s in snaps] == list(range(n_batches + 1))
+    for s in snaps:
+        tot, cnt = s.grouped_cached(group)
+        ot, oc = s.recompute_oracle(group)
+        assert _eq(tot, ot) and _eq(cnt, oc), (
+            f"snapshot v{s.data_version} != oracle at its version ({kind})")
+    # the live scorer itself ends bit-equal to the newest pin
+    lt, lc = ms.grouped_cached(group)
+    st_, sc_ = snaps[-1].grouped_cached(group)
+    assert _eq(lt, st_) and _eq(lc, sc_)
+
+
+@pytest.mark.parametrize("kind", ["star", "chain", "snowflake"])
+def test_snapshot_reads_bit_equal_pinned_oracle(kind):
+    _run_interleaving(kind, seed=11)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       kind=st.sampled_from(["star", "chain", "snowflake"]))
+@settings(max_examples=5, deadline=None)
+def test_snapshot_interleaving_property(seed, kind):
+    _run_interleaving(kind, seed=seed, n_batches=3)
+
+
+def test_unpinned_root_raises_and_snapshot_is_cached():
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    s = ms.snapshot(roots=(group,))
+    with pytest.raises(KeyError):
+        s.score_grouped("dim0")
+    # one version ⇒ one shared snapshot; apply invalidates it
+    assert ms.snapshot(roots=(group,)) is s
+    ms.apply(next(iter(delta_stream(sch, ms.live_rows, seed=3,
+                                    n_batches=1, ops_per_batch=2))))
+    assert ms.snapshot(roots=(group,)) is not s
+
+
+def test_snapshot_write_back_keeps_live_scorer_incremental():
+    """A snapshot's lazy path-refresh must flow back to the live scorer
+    when versions still agree — serving through snapshots costs no
+    duplicate message emissions."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    ms.grouped_cached(group)
+    ms.apply(next(iter(delta_stream(sch, ms.live_rows, seed=5,
+                                    n_batches=1, ops_per_batch=4))))
+    assert ms._dirty[group]
+    snap = ms.snapshot(roots=(group,))
+    snap.grouped_cached(group)                   # resolves + writes back
+    assert not ms._dirty[group]
+    e0 = ms.counter.edges if ms.counter else None
+    ms.grouped_cached(group)                     # live read: no refresh left
+    if e0 is not None:
+        assert ms.counter.edges == e0
+
+
+def test_concurrent_ingest_thread_vs_snapshot_reads():
+    """A real writer thread races apply() against snapshot scoring; every
+    result must bit-match the recompute oracle at its pinned version."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    ms.grouped_cached(group)
+    oracles = {0: ms.snapshot(roots=(group,), pin_oracle=True)}
+    n_batches = 8
+    stop = threading.Event()
+
+    def ingest():
+        # lazy stream: each batch is generated against the live rows it
+        # will actually apply to
+        for b in delta_stream(sch, ms.live_rows, seed=9,
+                              n_batches=n_batches, ops_per_batch=4):
+            ms.apply(b)
+            # single writer ⇒ no version can slip in before the pin
+            oracles[ms.data_version] = ms.snapshot(roots=(group,),
+                                                   pin_oracle=True)
+            time.sleep(0.002)
+        stop.set()
+
+    results = []                                 # (snapshot, tot, cnt)
+    t = threading.Thread(target=ingest)
+    t.start()
+    # keep reading until the writer is done AND we hold a few reads, so
+    # the audit below always has material even under scheduler jitter
+    while not stop.is_set() or len(results) < 3:
+        s = ms.snapshot(roots=(group,))
+        tot, cnt = s.score_grouped(group)
+        results.append((s, tot, cnt))
+    t.join()
+    assert len(oracles) == n_batches + 1
+    for s, tot, cnt in results:
+        ot, oc = oracles[s.data_version].recompute_oracle(group)
+        assert _eq(tot, ot) and _eq(cnt, oc), (
+            f"torn read at data_version {s.data_version}")
+
+
+# ------------------------------------------------------ per-root staleness
+
+def test_staleness_cold_root_does_not_pin_gauge():
+    """Regression: a root traffic abandoned must stop counting toward the
+    aggregate staleness gauge once it leaves the served window — only
+    per-root queries see its lag."""
+    sch = _schema("star")
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)),
+                          served_window_s=30.0)
+    hot, cold = sch.label_table, "dim0"
+    ms.grouped_cached(hot)
+    ms.grouped_cached(cold)                      # queried once, then abandoned
+    ms.apply(next(iter(delta_stream(sch, ms.live_rows, seed=2,
+                                    n_batches=1, ops_per_batch=3))))
+    assert ms.staleness_s(hot) > 0 and ms.staleness_s(cold) > 0
+    ms.grouped_cached(hot)                       # hot root refreshes
+    assert ms.staleness_s(hot) == 0.0
+    # cold root still in its served window: aggregate reflects it...
+    assert ms.staleness_s() > 0.0
+    # ...but once traffic has moved on (shrink the window rather than
+    # sleeping — equivalent and deterministic), it must stop counting
+    ms.served_window_s = 0.0
+    assert ms.staleness_s() == 0.0, "cold root pinned the gauge"
+    assert ms.staleness_s(cold) > 0.0            # per-root lag still visible
+
+
+def test_staleness_before_any_query_counts_all_roots():
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    ms.grouped_cached(group)
+    ms._last_query.clear()                       # as if nothing ever served
+    ms.apply(next(iter(delta_stream(sch, ms.live_rows, seed=4,
+                                    n_batches=1, ops_per_batch=2))))
+    assert ms.staleness_s() > 0.0
+
+
+# --------------------------------------------------- service: version pinning
+
+def test_dispatch_pins_version_between_enqueue_and_dispatch():
+    """Regression: a delta applied after enqueue but before dispatch must
+    not let the batch cache fresh scores under the stale version (or
+    vice versa) — the cached entry's version must match the snapshot the
+    scores were computed from."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    ms.grouped_cached(group)
+    batch = next(iter(delta_stream(sch, ms.live_rows, seed=6,
+                                   n_batches=1, ops_per_batch=4)))
+
+    async def run():
+        reg = ModelRegistry()
+        v = reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_wait_ms=40.0)
+        await svc.start()
+        task = asyncio.get_running_loop().create_task(svc.score(0))
+        await asyncio.sleep(0)                   # enqueued, batch still open
+        ms.apply(batch)                          # data_version 0 → 1
+        out = await task
+        await svc.stop()
+        return reg, v, svc, out
+
+    reg, v, svc, out = asyncio.run(run())
+    ep = reg.epoch(v)
+    keys = list(svc.cache._d)
+    assert keys == [(v, ep, 1, 0)], keys         # pinned at cutoff version
+    tot, cnt = ms.snapshot(roots=(group,), pin_oracle=True).recompute_oracle(group)
+    want = float(np.asarray(tot)[0]) / max(float(np.asarray(cnt)[0]), 1.0)
+    assert out == want
+
+
+def test_service_concurrent_ingest_cache_audit():
+    """Open-loop mini version of the bench: an ingest thread applies
+    deltas while the service scores; EVERY cached entry must bit-match
+    the recompute oracle at the data_version in its own key."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+    ms.grouped_cached(group)
+    oracles = {0: ms.snapshot(roots=(group,), pin_oracle=True)}
+
+    async def run():
+        reg = ModelRegistry()
+        v = reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_batch=8,
+                                       max_wait_ms=1.0, cache_size=4096)
+        await svc.start()
+        stop = threading.Event()
+
+        def ingest():
+            for b in delta_stream(sch, ms.live_rows, seed=8,
+                                  n_batches=6, ops_per_batch=3):
+                ms.apply(b)
+                oracles[ms.data_version] = ms.snapshot(roots=(group,),
+                                                       pin_oracle=True)
+                time.sleep(0.004)
+            stop.set()
+
+        rng = np.random.default_rng(0)
+        # one pre-ingest round guarantees version-0 entries in the audit
+        await svc.score_many(rng.integers(0, 32, size=6).tolist())
+        t = threading.Thread(target=ingest)
+        t.start()
+        while not stop.is_set():
+            ids = rng.integers(0, 32, size=6).tolist()
+            await svc.score_many(ids)
+        t.join()
+        # one post-ingest round guarantees final-version entries too
+        await svc.score_many(rng.integers(0, 32, size=6).tolist())
+        await svc.stop()
+        return reg, v, svc
+
+    reg, v, svc = asyncio.run(run())
+    assert len(svc.cache) > 0
+    means = {}
+    for (kv, ep, dv, row), val in svc.cache._d.items():
+        assert kv == v and ep == reg.epoch(v)
+        if dv not in means:
+            tot, cnt = oracles[dv].recompute_oracle(group)
+            means[dv] = (np.asarray(tot),
+                         np.maximum(np.asarray(cnt), 1.0))
+        tot, cnt = means[dv]
+        assert val == float(tot[row]) / float(cnt[row]), (
+            f"cache entry at v{dv} row {row} does not match its pinned oracle")
+    assert len(means) > 1                        # audit spanned versions
+
+
+# ------------------------------------------- service: deadline & backpressure
+
+def test_flood_past_max_wait_clamps_timeout():
+    """Flooding the queue far past the coalescing window must never feed
+    asyncio.wait_for a negative timeout — every request resolves, none
+    error out."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_batch=4,
+                                       max_wait_ms=0.01, cache_size=0,
+                                       latency_budget_ms=0.02)
+        await svc.start()
+        outs = await svc.score_many(list(range(64)) * 3)
+        await svc.stop()
+        return svc, outs
+
+    svc, outs = asyncio.run(run())
+    assert len(outs) == 192 and all(isinstance(o, float) for o in outs)
+    assert svc.stats.errors == 0
+    assert svc.stats.batches >= 192 // 4
+
+
+def test_deadline_cutoff_beats_max_wait():
+    """With a tight latency budget the batcher must close the window at
+    the deadline cutoff, not sit out a huge max_wait."""
+    sch, ms = _scorer("star")
+    group = sch.label_table
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_wait_ms=2000.0,
+                                       latency_budget_ms=50.0,
+                                       deadline_frac=0.5, cache_size=0)
+        await svc.start()
+        t0 = time.perf_counter()
+        await svc.score(0)
+        dt = time.perf_counter() - t0
+        await svc.stop()
+        return dt
+
+    dt = asyncio.run(run())
+    assert dt < 1.0, f"request waited {dt:.3f}s — deadline cutoff ignored"
+
+
+def test_queue_depth_admission_control_sheds():
+    sch, ms = _scorer("star")
+    group = sch.label_table
+
+    class Burning:                               # SLO stub: always degraded
+        def state(self):
+            return "degraded"
+
+        def record_latency(self, ms):
+            pass
+
+        def record_request(self, error=False):
+            pass
+
+        def set_staleness(self, s):
+            pass
+
+    async def run():
+        reg = ModelRegistry()
+        reg.publish(ms)
+        svc = RelationalScoringService(reg, group, max_batch=1,
+                                       max_wait_ms=0.0, cache_size=0,
+                                       slo=Burning(), max_queue=4)
+        await svc.start()
+        results = await asyncio.gather(
+            *(svc.score(i % 16) for i in range(64)), return_exceptions=True)
+        await svc.stop()
+        return svc, results
+
+    svc, results = asyncio.run(run())
+    shed = [r for r in results if isinstance(r, ServiceOverloadedError)]
+    ok = [r for r in results if isinstance(r, float)]
+    assert shed and ok and len(shed) + len(ok) == 64
+    assert svc.stats.shed == len(shed)
+
+
+# --------------------------------------------------- registry: epoch & swap
+
+def test_hot_swap_same_slot_does_not_collide_in_cache():
+    """Regression: two static models both report data_version 0; after an
+    in-place swap the service must serve the NEW model's scores, not the
+    old occupant's cached ones."""
+    sch = _schema("star")
+    ens_a = compile_ensemble(sch, _fit(sch, n_trees=2))
+    ens_b = compile_ensemble(sch, _fit(sch, n_trees=3))
+    assert ens_a.data_version == ens_b.data_version == 0
+    group = sch.label_table
+
+    def direct(ens, row):
+        from repro.serving.scorer import score_mean_rows
+        return float(np.asarray(
+            score_mean_rows(ens, group, np.asarray([row], np.int32)))[0])
+
+    async def run():
+        reg = ModelRegistry()
+        v = reg.publish(ens_a)
+        svc = RelationalScoringService(reg, group, max_wait_ms=0.1)
+        await svc.start()
+        a = await svc.score(0)
+        reg.swap(v, ens_b)
+        b = await svc.score(0)
+        await svc.stop()
+        return a, b
+
+    a, b = asyncio.run(run())
+    assert a == direct(ens_a, 0)
+    assert b == direct(ens_b, 0), "swap served the old occupant's cache"
+    assert a != b                                # distinct models, really
+
+
+def test_stacked_cache_tracks_swap_epoch():
+    sch = _schema("star")
+    ens_a = compile_ensemble(sch, _fit(sch, n_trees=2))
+    ens_b = compile_ensemble(sch, _fit(sch, n_trees=3))
+    group = sch.label_table
+    reg = ModelRegistry()
+    v = reg.publish(ens_a)
+    s1 = reg.stacked()
+    (ta, _), = s1.score_grouped(group)
+    reg.swap(v, ens_b)
+    s2 = reg.stacked()
+    assert s2 is not s1, "stacked cache survived a hot swap"
+    (tb, _), = s2.score_grouped(group)
+    assert not _eq(ta, tb)
+
+
+def test_stacked_pins_constituent_data_versions():
+    sch = _schema("star")
+    reg = ModelRegistry()
+    reg.publish(compile_ensemble(sch, _fit(sch, n_trees=2)))
+    st_ = reg.stacked()
+    assert st_.data_versions == (0,)
+
+
+# --------------------------------------------------- booster publish surface
+
+def test_incremental_booster_compile_snapshot_pins_version():
+    sch = _schema("star")
+    cfg = BoostConfig(n_trees=2, depth=2, mode="sketch", ssr_mode="off")
+    ib = IncrementalBooster(sch, cfg)
+    ib.fit()
+    for batch in delta_stream(sch, ib.live_rows, seed=3, n_batches=2,
+                              ops_per_batch=3):
+        ib.apply(batch)
+    snap = ib.compile_snapshot()
+    assert snap.data_version == ib.state.data_version > 0
+    # the artifact is static: registry-publishable and stackable
+    reg = ModelRegistry()
+    reg.publish(snap)
+    (tot, cnt), = reg.stacked().score_grouped(sch.label_table)
+    assert tot.shape[0] == cnt.shape[0] > 0
