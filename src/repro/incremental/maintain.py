@@ -78,7 +78,8 @@ class MaintainedScorer:
 
     def __init__(self, ens: CompiledEnsemble, slack: float = 0.25,
                  counter: Optional[QueryCounter] = None,
-                 served_window_s: float = 30.0):
+                 served_window_s: float = 30.0,
+                 snapshot_retention: int = 4):
         sch = ens.schema
         self.schema = sch
         self.source = ens
@@ -128,8 +129,15 @@ class MaintainedScorer:
         self._stale_since: Dict[str, float] = {}
         self._last_query: Dict[str, float] = {}
         self.served_window_s = served_window_s
-        # latest published MVCC snapshot (invalidated on every apply)
-        self._snap: Optional["Snapshot"] = None
+        # recently published MVCC snapshots, keyed by data_version.  The
+        # cache retains at most `snapshot_retention` versions (GC on
+        # every apply/publish): evicted snapshots keep serving for
+        # whoever still references them — the scorer just stops pinning
+        # their factors/messages against collection.  The gauges let
+        # /metricsz watch pin pressure (a long-pinned old version shows
+        # up as oldest_pin_age_s growing without bound).
+        self.snapshot_retention = max(1, int(snapshot_retention))
+        self._snaps: Dict[int, "Snapshot"] = {}
 
     # ------------------------------------------------------------- queries --
     def n_rows(self, table: str) -> int:
@@ -184,7 +192,7 @@ class MaintainedScorer:
                         self._stale_since.setdefault(root, now)
             self._grouped.clear()
             self.data_version += 1
-            self._snap = None
+            self._gc_snapshots()
         reg = get_registry()
         reg.counter("ivm.deltas").inc(len(deltas))
         reg.histogram("ivm.apply_ms").observe((time.perf_counter() - t0) * 1e3)
@@ -407,7 +415,7 @@ class MaintainedScorer:
         names = (tuple(sorted(roots)) if roots is not None
                  else tuple(t.name for t in self.schema.tables))
         with self.state.lock:
-            snap = self._snap
+            snap = self._snaps.get(self.data_version)
             if (snap is not None
                     and set(names) <= set(snap.view.jts)
                     and (not pin_oracle or snap.view.schema is not None)):
@@ -420,8 +428,55 @@ class MaintainedScorer:
                       if r in self._msgs},
                 dirty={r: frozenset(self._dirty.get(r, ())) for r in names},
             )
-            self._snap = snap
+            self._snaps[self.data_version] = snap
+            self._gc_snapshots()
             return snap
+
+    def _gc_snapshots(self) -> None:
+        """Evict cached snapshot versions beyond the retention window
+        and republish the pin-pressure gauges.  Called under
+        ``state.lock`` (from ``apply`` and ``snapshot``)."""
+        floor = self.data_version - self.snapshot_retention
+        for v in [v for v in self._snaps if v <= floor]:
+            del self._snaps[v]
+        reg = get_registry()
+        reg.gauge("snapshot.pinned_versions").set(len(self._snaps))
+        oldest = min((s.t_created for s in self._snaps.values()),
+                     default=None)
+        reg.gauge("snapshot.oldest_pin_age_s").set(
+            0.0 if oldest is None else max(0.0, time.time() - oldest))
+
+    def adopt_state(self, state: DynamicState) -> None:
+        """Replace the dynamic substrate with a RECOVERED state (a
+        checkpoint load — see :mod:`repro.incremental.recover`).
+
+        The stacked leaf-mask factors are re-evaluated for every live
+        slot of the adopted state; factor rows are pure per-row
+        functions of current column values, so the result is
+        bit-identical to having maintained them through the original
+        delta stream.  All cached messages, memoized scores, staleness
+        markers and snapshots are dropped (they referred to the old
+        substrate), and ``data_version`` adopts the recovered LSN."""
+        with state.lock:
+            self.state = state
+            self.tables = state.tables
+            self.edges = state.edges
+            self.factors = {}
+            for t in self.schema.tables:
+                dt = self.tables[t.name]
+                self.factors[t.name] = spmd.shard_factor(
+                    jnp.zeros((dt.capacity, self.total_leaves),
+                              self.factor_dtype), self.mesh)
+                live = dt.live_slots()
+                if len(live):
+                    self._refresh_factor_rows(t.name, live)
+            self._msgs.clear()
+            self._dirty.clear()
+            self._grouped.clear()
+            self._stale_since.clear()
+            self._last_query.clear()
+            self._snaps.clear()
+            self.data_version = state.data_version
 
     def _absorb(self, root: str, data_version: int, msgs) -> None:
         """Adopt a snapshot's refreshed messages iff the live scorer is
@@ -482,6 +537,7 @@ class Snapshot:
         self._owner = owner
         self.view = view
         self.data_version = data_version
+        self.t_created = time.time()
         self.jt_version = view.jt_version
         self.factors = factors
         self.leaf_values = leaf_values

@@ -100,6 +100,10 @@ class DynamicState:
         self._jts: Dict[str, JoinTree] = {}
         self._jt_built_at: Dict[str, int] = {}
         self._listeners: List = []
+        # durable delta log (incremental/wal.py), attached via
+        # ``WalWriter.attach(state)``: every applied batch is appended
+        # under this lock with lsn == the data_version it produces
+        self.wal = None
         # Reentrant: apply() holds it across listener callbacks, and a
         # listener may legitimately take a snapshot of the state it is
         # being notified about.
@@ -240,6 +244,13 @@ class DynamicState:
             ))
         if structural:
             self.jt_version += 1
+        # WAL append sits AFTER the mutations (which can only raise
+        # before touching anything durable) and BEFORE the version bump:
+        # the log carries exactly the committed versions in order, and a
+        # crash in the append window loses only in-memory state — which
+        # the crash loses anyway — never a logged-but-unapplied version
+        if self.wal is not None:
+            self.wal.append(self.data_version + 1, deltas)
         self.data_version += 1
         for fn in self._listeners:
             fn(changes)

@@ -22,6 +22,8 @@ apply_early_device_flags()
 
 import argparse
 import asyncio
+import dataclasses
+import os
 import time
 
 import numpy as np
@@ -59,7 +61,7 @@ def train(schema, args, seed=0):
 
 
 async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
-                schema, args, counter, telemetry=None):
+                schema, args, counter, telemetry=None, hot_swap=True):
     rng = np.random.default_rng(1)
     ids = np.minimum(rng.zipf(zipf_a, n_requests) - 1, n_rows - 1)
     await service.start()
@@ -94,21 +96,22 @@ async def drive(service, n_rows, n_requests, concurrency, zipf_a, registry,
     print(f"batches: {snap['batches']} (mean size {snap['mean_batch']:.1f}), "
           f"cache hit rate {100 * snap['cache_hit_rate']:.1f}%")
 
-    # hot swap: publish a refreshed model mid-traffic (same kernel route,
-    # query accounting and mesh placement as v1)
-    with spmd.use_data_mesh(getattr(args, "_mesh", None)):
-        v2 = registry.publish(compile_ensemble(
-            schema, train(schema, args, seed=7),
-            use_kernel=args.kernel, counter=counter,
-        ))
-    more = rng.integers(0, n_rows, 64)
-    try:
-        out = await service.score_many(more.tolist())
-        print(f"hot-swapped to version {v2}; {len(out)} post-swap requests OK "
-              f"(sample score {out[0]:+.3f})")
-    except ServiceOverloadedError:
-        print(f"hot-swapped to version {v2}; post-swap requests shed "
-              f"(SLO state unhealthy)")
+    if hot_swap:
+        # hot swap: publish a refreshed model mid-traffic (same kernel
+        # route, query accounting and mesh placement as v1)
+        with spmd.use_data_mesh(getattr(args, "_mesh", None)):
+            v2 = registry.publish(compile_ensemble(
+                schema, train(schema, args, seed=7),
+                use_kernel=args.kernel, counter=counter,
+            ))
+        more = rng.integers(0, n_rows, 64)
+        try:
+            out = await service.score_many(more.tolist())
+            print(f"hot-swapped to version {v2}; {len(out)} post-swap "
+                  f"requests OK (sample score {out[0]:+.3f})")
+        except ServiceOverloadedError:
+            print(f"hot-swapped to version {v2}; post-swap requests shed "
+                  f"(SLO state unhealthy)")
     if service.slo is not None:
         rep = service.slo.evaluate()
         objs = "  ".join(
@@ -138,6 +141,18 @@ def main(argv=None):
     ap.add_argument("--zipf", type=float, default=1.3)
     ap.add_argument("--kernel", action="store_true",
                     help="route the segment-⊕ through the Pallas kernel")
+    ap.add_argument("--follow", metavar="WAL_DIR", default=None,
+                    help="follower mode: recover a read-only replica from "
+                         "this WAL dir (+ its ckpt/ checkpoints) and tail "
+                         "the writer's log live; replication lag feeds the "
+                         "SLO staleness objective (degrade-only — a dead "
+                         "writer degrades the replica, never kills it)")
+    ap.add_argument("--follow-poll-ms", type=float, default=10.0,
+                    help="follower tail-poll interval")
+    ap.add_argument("--heartbeat-grace-s", type=float, default=5.0,
+                    help="writer idle time beyond which the follower "
+                         "reports the idle age as staleness (writer "
+                         "presumed dead past its heartbeat cadence)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record spans and write a Chrome trace "
                          "(open in Perfetto) plus PATH.jsonl")
@@ -178,9 +193,37 @@ def main(argv=None):
           + (f" [data-parallel over {spmd.data_axis_size(mesh)} devices]"
              if mesh is not None else ""))
 
+    # follower mode: the served model is a recovered replica driven by a
+    # WAL tail from another process's writer, not the fresh compile
+    follower = None
+    serve_model = ens
+    if args.follow:
+        from repro.incremental.recover import recover_scorer
+        from repro.incremental.wal import WalFollower
+
+        ckpt_dir = os.path.join(args.follow, "ckpt")
+        with spmd.use_data_mesh(mesh):
+            serve_model, rep = recover_scorer(
+                ens, args.follow,
+                ckpt_dir if os.path.isdir(ckpt_dir) else None,
+                counter=counter)
+        print(f"follower: recovered to data_v{rep.recovered_lsn} "
+              f"(checkpoint lsn {rep.checkpoint_lsn} + {rep.replayed} "
+              f"replayed, {rep.tail_bytes_discarded}B torn tail discarded)")
+        follower = WalFollower(
+            args.follow, serve_model.apply, start_lsn=rep.recovered_lsn,
+            poll_interval_s=args.follow_poll_ms / 1e3).start()
+
     slo = None
     if args.slo:
-        slo = SLOMonitor(parse_slo_spec(args.slo),
+        objectives = parse_slo_spec(args.slo)
+        if follower is not None:
+            # a dead/lagging writer must degrade the replica (serve
+            # stale), never shed its traffic — cap staleness at degraded
+            objectives = [dataclasses.replace(o, degrade_only=True)
+                          if o.kind == "staleness" else o
+                          for o in objectives]
+        slo = SLOMonitor(objectives,
                          fast_window_s=5.0, slow_window_s=30.0)
     flight = None
     if args.flight:
@@ -190,11 +233,22 @@ def main(argv=None):
         ).start()
 
     registry = ModelRegistry()
-    v1 = registry.publish(ens)
+    v1 = registry.publish(serve_model)
+    extra_staleness = None
+    if follower is not None:
+        grace = args.heartbeat_grace_s
+
+        def extra_staleness():
+            # served data lags by the undrained log tail; once drained,
+            # a writer silent past its heartbeat cadence is presumed
+            # dead and its idle age becomes the staleness signal
+            return max(follower.replication_lag_s(),
+                       max(0.0, follower.writer_idle_s() - grace))
+
     service = RelationalScoringService(
         registry, group, max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms, cache_size=args.cache_size,
-        slo=slo, flight=flight,
+        slo=slo, flight=flight, extra_staleness=extra_staleness,
     )
     telemetry = None
     if args.metrics_port is not None:
@@ -216,7 +270,15 @@ def main(argv=None):
     n_rows = schema.table(group).n_rows
     qps = asyncio.run(drive(service, n_rows, args.requests, args.concurrency,
                             args.zipf, registry, schema, args, counter,
-                            telemetry=telemetry))
+                            telemetry=telemetry, hot_swap=follower is None))
+    if follower is not None:
+        try:
+            follower.stop(drain=True)
+            print(f"follower: applied through lsn {follower.applied_lsn}, "
+                  f"replication lag {follower.replication_lag_s():.3f}s, "
+                  f"writer idle {follower.writer_idle_s():.1f}s")
+        except Exception as e:           # noqa: BLE001 — report, don't die
+            print(f"follower stopped with error: {e}")
     if sampler is not None:
         sampler.stop()
         print(f"wrote {sampler.samples} telemetry samples to {args.sample}")

@@ -23,6 +23,7 @@ from repro.launch._devices import (          # noqa: I001  (must precede
 apply_early_device_flags()
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -71,6 +72,16 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--ops", type=int, default=8)
     ap.add_argument("--audit-every", type=int, default=4)
+    ap.add_argument("--wal-dir", metavar="DIR", default=None,
+                    help="durable delta log: append every applied batch to "
+                         "DIR/wal.log (crash-consistent; a follower process "
+                         "can tail it with serve_relational --follow DIR). "
+                         "An existing log is recovered and resumed.")
+    ap.add_argument("--checkpoint-every", type=int, default=None, metavar="N",
+                    help="checkpoint the dynamic store to DIR/ckpt every N "
+                         "batches (recovery = newest checkpoint + WAL tail)")
+    ap.add_argument("--wal-sync-every", type=int, default=8,
+                    help="fsync the log every N appends (group commit)")
     ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
                     help="serve /metricsz /healthz /statusz /tracez on this "
                          "port (0 = ephemeral) for the duration of the stream")
@@ -98,6 +109,23 @@ def main(argv=None):
         ms = MaintainedScorer(compile_ensemble(schema, trees), counter=counter)
     if mesh is not None:
         print(f"data-parallel over {spmd.data_axis_size(mesh)} devices")
+    wal = ckpt_dir = None
+    if args.wal_dir:
+        from repro.incremental.recover import recover_scorer, save_checkpoint
+        from repro.incremental.wal import WalWriter, wal_path
+
+        ckpt_dir = os.path.join(args.wal_dir, "ckpt")
+        if os.path.exists(wal_path(args.wal_dir)) or os.path.isdir(ckpt_dir):
+            with spmd.use_data_mesh(mesh):
+                ms, rep = recover_scorer(
+                    compile_ensemble(schema, trees), args.wal_dir,
+                    ckpt_dir if os.path.isdir(ckpt_dir) else None,
+                    counter=counter)
+            print(f"recovered: checkpoint lsn {rep.checkpoint_lsn} + "
+                  f"{rep.replayed} replayed → data_v{rep.recovered_lsn} "
+                  f"({rep.tail_bytes_discarded}B torn tail discarded)")
+        wal = WalWriter(args.wal_dir, sync_every=args.wal_sync_every,
+                        repair=True).attach(ms.state)
     registry = ModelRegistry()
     v = registry.publish(ms)
     ms.grouped_cached(group)                      # prime the message cache
@@ -158,6 +186,10 @@ def main(argv=None):
         if (bi + 1) % args.audit_every == 0:
             err = audit(ms, group)
             note = f"  audit max|Δ|={err:.1e}" + ("  OK" if err == 0.0 else "  DRIFT!")
+        if (ckpt_dir is not None and args.checkpoint_every
+                and (bi + 1) % args.checkpoint_every == 0):
+            path = save_checkpoint(ms.state, ckpt_dir)
+            note += f"  ckpt→{os.path.basename(path)}"
         print(f"batch {bi:>3} ({ops} ops, {len(batch)} tables) → data_v{dv} "
               f"edges={counter.edges - e0} {lat[-1]:6.1f} ms{note}")
     n = len(lat)
@@ -167,6 +199,12 @@ def main(argv=None):
     err = audit(ms, group)
     print(f"final audit vs fresh recompute: max|Δ|={err:.1e} "
           + ("(exact)" if err == 0.0 else "(DRIFT)"))
+    if wal is not None:
+        wal.heartbeat()                  # followers see a live, idle writer
+        durable = wal.sync()
+        wal.close()
+        print(f"WAL: durable through lsn {durable} "
+              f"({os.path.getsize(wal.path)} bytes at {wal.path})")
     if slo is not None:
         rep = slo.evaluate()
         print(f"SLO state: {rep['state']}  "

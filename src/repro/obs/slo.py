@@ -58,6 +58,12 @@ class SLOObjective:
     kind: str                    # "latency" | "error_rate" | "staleness"
     target: float                # ms (latency) / fraction / seconds
     objective: float = 0.99     # good-fraction required (latency kind only)
+    # graceful-degradation cap: this objective can pull the aggregate
+    # state to DEGRADED but never UNHEALTHY.  Used by follower replicas:
+    # a dead writer makes served data arbitrarily stale, and the right
+    # behavior is "serve stale, report degraded" — not shedding the only
+    # traffic the replica exists to absorb.
+    degrade_only: bool = False
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -201,6 +207,9 @@ class SLOMonitor:
             floor = min(fast, slow)      # both windows must burn hot
             state = (UNHEALTHY if floor >= self.unhealthy_burn else
                      DEGRADED if floor >= self.degraded_burn else HEALTHY)
+            if o.degrade_only and state == UNHEALTHY:
+                state = DEGRADED         # serve stale, never shed
+
             if _STATE_RANK[state] > _STATE_RANK[worst]:
                 worst = state
             good, bad = self._life[name]

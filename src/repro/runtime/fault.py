@@ -11,6 +11,7 @@ failures.
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Callable, List, Optional
 
@@ -61,6 +62,51 @@ class _Timer:
         if exc[0] is None:
             self.wd.observe(self.step, time.monotonic() - self.t0)
         return False
+
+
+class Backoff:
+    """Jittered exponential backoff with a hard retry-time budget.
+
+    ``next_delay()`` returns the next sleep (seconds): exponential from
+    ``base_s`` up to ``cap_s``, multiplied by a uniform jitter in
+    ``[1 - jitter, 1]`` so synchronized retriers (e.g. several WAL
+    followers tailing one log) de-correlate.  Once the cumulative delay
+    would exceed ``budget_s`` it raises ``RuntimeError`` — a retry loop
+    with a budget can stall, never hang.  ``reset()`` after a success;
+    ``clone()`` gives an independent instance with the same policy
+    (per-thread state, shared configuration).
+    """
+
+    def __init__(self, base_s: float = 0.01, cap_s: float = 1.0,
+                 budget_s: float = 30.0, jitter: float = 0.5,
+                 seed: Optional[int] = None):
+        self.base_s = base_s
+        self.cap_s = cap_s
+        self.budget_s = budget_s
+        self.jitter = jitter
+        self._seed = seed
+        self._rng = random.Random(seed)
+        self._attempt = 0
+        self._spent = 0.0
+
+    def next_delay(self) -> float:
+        raw = min(self.cap_s, self.base_s * (2.0 ** self._attempt))
+        delay = raw * (1.0 - self.jitter * self._rng.random())
+        if self._spent + delay > self.budget_s:
+            raise RuntimeError(
+                f"retry budget exhausted after {self._attempt} attempts "
+                f"({self._spent:.2f}s of {self.budget_s:.2f}s)")
+        self._attempt += 1
+        self._spent += delay
+        return delay
+
+    def reset(self) -> None:
+        self._attempt = 0
+        self._spent = 0.0
+
+    def clone(self) -> "Backoff":
+        return Backoff(self.base_s, self.cap_s, self.budget_s,
+                       self.jitter, self._seed)
 
 
 def run_with_retries(step_fn, state, batch, *, retries: int = 2,

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..obs import MetricsRegistry, get_registry, span
+from ..runtime.fault import Backoff
 from .compile import CompiledEnsemble
 from .scorer import score_mean_rows
 
@@ -188,6 +189,7 @@ class ServiceStats:
         self._cache_hits = r.counter("service.cache_hits")
         self._rejected = r.counter("service.rejected")   # bad row ids
         self._errors = r.counter("service.errors")       # dispatch failures
+        self._retries = r.counter("service.retries")     # transient redispatch
         self._shed = r.counter("service.shed")           # admission control
         self.staleness_s = r.gauge("service.staleness_s")
         self.queue_wait_ms = r.histogram("service.queue_wait_ms")
@@ -220,6 +222,10 @@ class ServiceStats:
         return self._errors.value
 
     @property
+    def retries(self) -> int:
+        return self._retries.value
+
+    @property
     def shed(self) -> int:
         return self._shed.value
 
@@ -240,6 +246,7 @@ class ServiceStats:
             "cache_hit_rate": self.cache_hits / max(self.requests, 1),
             "rejected": self.rejected,
             "errors": self.errors,
+            "retries": self.retries,
             "shed": self.shed,
             "staleness_s": self.staleness_s.value,
             "mean_batch": self.mean_batch,
@@ -288,6 +295,8 @@ class RelationalScoringService:
         latency_budget_ms: Optional[float] = None,
         deadline_frac: float = 0.5,
         max_queue: Optional[int] = None,
+        retry_transient: bool = True,
+        extra_staleness=None,            # () -> seconds, e.g. replication lag
     ):
         self.registry = registry
         self.group_by = group_by
@@ -318,6 +327,22 @@ class RelationalScoringService:
         # new requests shed with ServiceOverloadedError instead of
         # compounding everyone's queue wait.  None disables.
         self.max_queue = max_queue
+        # transient-failure retry: a version dispatch that throws gets
+        # ONE re-attempt after a jittered, budget-capped backoff before
+        # its requests count toward service.errors — a single JAX /
+        # runtime hiccup must not fail a whole coalesced batch.  The
+        # budget bounds total sleep across repeated failures; once
+        # exhausted, failures surface immediately until a success
+        # resets it.
+        self.retry_transient = retry_transient
+        self._retry_backoff = Backoff(base_s=0.005, cap_s=0.05,
+                                      budget_s=1.0)
+        # replica wiring: an extra staleness source folded (max) into
+        # the SLO staleness signal — a WAL follower passes its
+        # replication lag here, so a lagging/dead writer burns the
+        # staleness objective even while the local scorer itself is
+        # fully caught up with everything the log delivered
+        self.extra_staleness = extra_staleness
         self._q: "asyncio.Queue" = asyncio.Queue()
         self._task: Optional["asyncio.Task"] = None
 
@@ -499,13 +524,30 @@ class RelationalScoringService:
                 # pinned to other versions still get their scores
                 try:
                     self._dispatch_version(v, reqs)
+                    self._retry_backoff.reset()
+                    continue
                 except Exception as e:
-                    st._errors.inc(len(reqs))
-                    if self.flight is not None:
-                        self.flight.observe_error(e, batch_size=len(reqs))
-                    for r in reqs:
-                        if not r.future.done():
-                            r.future.set_exception(e)
+                    err = e
+                if self.retry_transient:
+                    try:
+                        delay = self._retry_backoff.next_delay()
+                    except RuntimeError:     # retry budget exhausted
+                        delay = None
+                    if delay is not None:
+                        time.sleep(delay)
+                        st._retries.inc()
+                        try:
+                            self._dispatch_version(v, reqs)
+                            self._retry_backoff.reset()
+                            continue
+                        except Exception as e:
+                            err = e
+                st._errors.inc(len(reqs))
+                if self.flight is not None:
+                    self.flight.observe_error(err, batch_size=len(reqs))
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(err)
         st._batches.inc()
         st._batched_rows.inc(len(batch))
         st.batch_size.observe(len(batch))
@@ -519,11 +561,17 @@ class RelationalScoringService:
         # back to the live scorer, clearing it).  Sampled from the live
         # model — the snapshot is frozen and has no lag of its own.
         stale = getattr(ens, "staleness_s", None)
+        s = None
         if callable(stale):
             try:
                 s = stale(self.group_by)
             except TypeError:            # provider without per-root lag
                 s = stale()
+        if self.extra_staleness is not None:
+            # replica mode: served data lags by the WORSE of local
+            # refresh lag and replication lag behind the writer's log
+            s = max(s or 0.0, float(self.extra_staleness()))
+        if s is not None:
             st.staleness_s.set(s)
             if self.slo is not None:
                 self.slo.set_staleness(s)

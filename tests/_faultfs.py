@@ -1,0 +1,74 @@
+"""Fault-injection harness for the durability tests.
+
+The WAL/checkpoint code calls an injectable ``fault(point, **ctx)`` hook
+at every durability-relevant step (``append.before`` / ``append.write``
+/ ``append.after`` / ``sync.before`` / ``sync.after`` /
+``ckpt.before_rename`` / ``ckpt.after_rename`` / ``ckpt.after``).  A
+:class:`FaultPlan` is that hook: it raises :class:`CrashPoint` at one
+chosen point (optionally only on its Nth hit), or — for
+``append.write`` — returns a torn byte count so the writer persists a
+prefix of the record and then dies.
+
+On top of the in-process crash points, :func:`flip_tail_bit` and
+:func:`truncate_tail` damage a closed log file the way real storage
+does (bit rot, lost sectors), so recovery's checksum path is exercised
+against byte-level corruption, not just clean process death.
+"""
+import os
+
+
+class CrashPoint(BaseException):
+    """Simulated process death at an injected fault point.
+
+    Derives from ``BaseException`` so production ``except Exception``
+    handlers cannot accidentally absorb a simulated crash — exactly
+    like a real SIGKILL, nothing downstream of the point runs.
+    """
+
+
+class FaultPlan:
+    """Callable fault hook: die at ``crash_at`` on its ``on_hit``-th hit.
+
+    ``tear`` (``append.write`` only) persists that many bytes of the
+    record buffer before dying — a torn write.  The plan fires at most
+    once; after firing it is inert, so the recovery path can reuse the
+    same writer objects without re-crashing.
+    """
+
+    def __init__(self, crash_at=None, on_hit=1, tear=None):
+        self.crash_at = crash_at
+        self.on_hit = on_hit
+        self.tear = tear
+        self.hits = {}
+        self.fired = False
+
+    def __call__(self, point, **ctx):
+        n = self.hits.get(point, 0) + 1
+        self.hits[point] = n
+        if self.fired or point != self.crash_at or n != self.on_hit:
+            return None
+        self.fired = True
+        if point == "append.write" and self.tear is not None:
+            buf = ctx.get("buf", b"")
+            return max(0, min(self.tear, max(0, len(buf) - 1)))
+        raise CrashPoint(f"injected crash at {point} (hit {n})")
+
+
+def flip_tail_bit(path: str, back: int = 3) -> None:
+    """Flip one bit ``back`` bytes from the end of ``path`` (bit rot in
+    the newest record — the checksum must catch it)."""
+    size = os.path.getsize(path)
+    at = max(0, size - back)
+    with open(path, "r+b") as f:
+        f.seek(at)
+        b = f.read(1)
+        f.seek(at)
+        f.write(bytes([b[0] ^ 0x40]))
+
+
+def truncate_tail(path: str, nbytes: int) -> None:
+    """Drop the last ``nbytes`` of ``path`` (a lost sector / partial
+    flush at the tail)."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(0, size - nbytes))

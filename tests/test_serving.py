@@ -228,3 +228,95 @@ def test_pipeline_importance_sampling_applied():
     b3 = next(p3)
     p3.stop()
     assert len(np.unique(b3["doc_ids"])) > 1
+
+
+# ------------------------------------------------------- transient dispatch
+
+class _FlakySnapshotProvider:
+    """Maintained-scorer stand-in whose MVCC snapshot fails the first
+    ``fail_times`` dispatches (a transient tear), then heals."""
+
+    def __init__(self, inner, fail_times=1):
+        self._inner = inner
+        self.fails_left = fail_times
+        self.snapshot_calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def snapshot(self, roots=()):
+        self.snapshot_calls += 1
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise RuntimeError("transient snapshot tear (injected)")
+        return self._inner.snapshot(roots=roots)
+
+
+def _flaky_service(sch, trees, fail_times):
+    from repro.incremental import MaintainedScorer
+
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    ms.grouped_cached(sch.label_table)
+    flaky = _FlakySnapshotProvider(ms, fail_times=fail_times)
+    reg = ModelRegistry()
+    reg.publish(flaky)
+    svc = RelationalScoringService(reg, sch.label_table, max_batch=64,
+                                   max_wait_ms=2.0, cache_size=64)
+    return ms, flaky, svc
+
+
+def test_service_retries_once_failing_dispatch(star, star_trees):
+    """A once-failing version dispatch is re-driven after a jittered
+    backoff: callers see scores, not the transient error."""
+    sch, J, X, y = star
+    ms, flaky, svc = _flaky_service(sch, star_trees[:2], fail_times=1)
+    tot, cnt = ms.grouped_cached(sch.label_table)
+    want = np.asarray(tot) / np.maximum(np.asarray(cnt), 1.0)
+
+    async def run():
+        await svc.start()
+        got = await svc.score_many(range(12))
+        await svc.stop()
+        return got
+
+    got = asyncio.run(run())
+    np.testing.assert_allclose(np.asarray(got), want[:12], rtol=1e-5)
+    assert flaky.fails_left == 0 and flaky.snapshot_calls >= 2
+    assert svc.stats.retries >= 1
+    assert svc.stats.errors == 0
+
+
+def test_service_persistent_failure_still_errors(star, star_trees):
+    """One retry, not infinite: a dispatch that keeps failing surfaces
+    the error to its callers and counts in service.errors."""
+    sch, J, X, y = star
+    _, flaky, svc = _flaky_service(sch, star_trees[:2], fail_times=10_000)
+
+    async def run():
+        await svc.start()
+        with pytest.raises(RuntimeError, match="transient snapshot tear"):
+            await svc.score(0)
+        await svc.stop()
+
+    asyncio.run(run())
+    assert svc.stats.errors >= 1
+    assert svc.stats.retries >= 1          # it did try again first
+
+
+def test_service_retry_disabled_fails_fast(star, star_trees):
+    sch, J, X, y = star
+    ms, flaky, _ = _flaky_service(sch, star_trees[:2], fail_times=1)
+    reg = ModelRegistry()
+    reg.publish(flaky)
+    svc = RelationalScoringService(reg, sch.label_table, max_batch=64,
+                                   max_wait_ms=2.0, retry_transient=False)
+
+    async def run():
+        await svc.start()
+        with pytest.raises(RuntimeError, match="transient snapshot tear"):
+            await svc.score(0)
+        await svc.stop()
+
+    asyncio.run(run())
+    assert svc.stats.retries == 0
+    assert svc.stats.errors >= 1

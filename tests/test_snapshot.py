@@ -460,3 +460,43 @@ def test_incremental_booster_compile_snapshot_pins_version():
     reg.publish(snap)
     (tot, cnt), = reg.stacked().score_grouped(sch.label_table)
     assert tot.shape[0] == cnt.shape[0] > 0
+
+
+# --------------------------------------------------------------- snapshot GC
+
+def test_snapshot_gc_bounds_cache_and_long_pin_stays_servable():
+    """A snapshot handle held across many applies must keep serving its
+    pinned version bit-exactly even after the scorer's version cache has
+    GC'd it; the cache itself stays bounded by ``snapshot_retention``."""
+    sch = _schema("star")
+    ms = MaintainedScorer(compile_ensemble(sch, _fit(sch)),
+                          snapshot_retention=3)
+    group = sch.label_table
+    ms.grouped_cached(group)
+    pinned = ms.snapshot(roots=(group,), pin_oracle=True)
+    v0 = pinned.data_version
+    ot, oc = pinned.recompute_oracle(group)      # oracle pinned at v0
+
+    for batch in delta_stream(sch, ms.live_rows, seed=21,
+                              n_batches=8, ops_per_batch=3):
+        ms.apply(batch)
+        ms.snapshot(roots=(group,))              # one pin per version
+
+    # the per-version cache is bounded and the old version was evicted…
+    assert len(ms._snaps) <= ms.snapshot_retention
+    assert v0 not in ms._snaps
+    assert min(ms._snaps) > ms.data_version - ms.snapshot_retention
+    # …but the long-held handle is self-contained: still bit-equal to
+    # the oracle recomputed at ITS version, untouched by 8 newer applies
+    t_old, c_old = pinned.grouped_cached(group)
+    assert _eq(t_old, ot) and _eq(c_old, oc)
+    # a fresh snapshot at the live version still round-trips
+    live = ms.snapshot(roots=(group,), pin_oracle=True)
+    lt, lc = live.grouped_cached(group)
+    lo_t, lo_c = live.recompute_oracle(group)
+    assert _eq(lt, lo_t) and _eq(lc, lo_c)
+    # GC publishes its pressure gauges
+    from repro.obs import get_registry
+    snap = get_registry().snapshot()
+    assert snap["snapshot.pinned_versions"]["value"] == len(ms._snaps)
+    assert snap["snapshot.oldest_pin_age_s"]["value"] >= 0.0

@@ -1,0 +1,301 @@
+"""Crash-recovery fault matrix: after ANY injected fault — a crash at
+each durability point, a torn append, tail bit-rot, tail truncation, a
+SIGKILL'd writer process — recovery lands on a valid LSN and the
+recovered state scores bit-equal the recompute oracle at that
+``data_version``.
+
+Tier-1 runs the subprocess SIGKILL smoke plus one representative
+in-process fault per family; the exhaustive crash-point matrix is
+marked ``slow`` (nightly, ``pytest -m ""``).
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from _faultfs import CrashPoint, FaultPlan, flip_tail_bit, truncate_tail
+from repro.core import Booster, BoostConfig
+from repro.incremental import MaintainedScorer
+from repro.incremental.recover import (
+    latest_checkpoint_lsn, load_checkpoint, recover_scorer, recover_state,
+    save_checkpoint,
+)
+from repro.incremental.wal import WalWriter, scan_wal, wal_path
+from repro.relational.generators import delta_stream, star_schema
+from repro.serving import compile_ensemble
+
+SEED = 7
+
+
+def _schema_and_trees():
+    sch = star_schema(seed=SEED, n_fact=100, n_dim=10)
+    b = Booster(sch, BoostConfig(n_trees=2, depth=2, mode="sketch",
+                                 ssr_mode="off"))
+    return sch, b.fit()[0]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _schema_and_trees()
+
+
+def _assert_recovered_matches_oracle(ms, root):
+    tot, cnt = (np.asarray(a) for a in ms.score_grouped(root))
+    ot, oc = (np.asarray(a) for a in ms.recompute_oracle(root))
+    assert tot.tobytes() == ot.tobytes(), "recovered ≠ oracle (tot)"
+    assert cnt.tobytes() == oc.tobytes(), "recovered ≠ oracle (cnt)"
+
+
+def _stream_until_crash(model, wal_dir, plan, n_batches=8, ckpt_dir=None,
+                        ckpt_at=None, sync_every=1):
+    """Drive a WAL-attached writer until the plan kills it (or the
+    stream ends).  Returns the writer-side versions that were applied
+    before death."""
+    sch, trees = model
+    ms = MaintainedScorer(compile_ensemble(sch, trees))
+    w = WalWriter(wal_dir, sync_every=sync_every, fault=plan)
+    w.attach(ms.state)
+    applied = 0
+    try:
+        for i, b in enumerate(delta_stream(sch, ms.live_rows, seed=3,
+                                           n_batches=n_batches,
+                                           ops_per_batch=4)):
+            ms.apply(b)
+            applied = ms.data_version
+            if ckpt_at is not None and i + 1 == ckpt_at:
+                save_checkpoint(ms.state, ckpt_dir, fault=plan)
+    except CrashPoint:
+        pass
+    else:
+        w.close()
+    return applied
+
+
+CRASH_POINTS = [
+    ("append.before", None),
+    ("append.write", 5),        # torn: 5 bytes of the record persisted
+    ("append.write", 64),       # torn: most of the record persisted
+    ("append.after", None),
+    ("sync.before", None),
+    ("sync.after", None),
+]
+CKPT_POINTS = ["ckpt.before_rename", "ckpt.after_rename", "ckpt.after"]
+
+
+def _preserve_wal(wal_dir, tag):
+    """Copy a failing fault's WAL dir for CI artifact upload."""
+    art = os.environ.get("REPRO_WAL_ARTIFACT_DIR")
+    if art:
+        import shutil
+        dst = os.path.join(art, tag.replace("/", "_").replace(".", "_"))
+        shutil.rmtree(dst, ignore_errors=True)
+        shutil.copytree(wal_dir, dst)
+
+
+def _check_crash_point(model, point, tear, on_hit=3):
+    sch, trees = model
+    root = sch.tables[0].name
+    with tempfile.TemporaryDirectory() as d:
+        plan = FaultPlan(crash_at=point, on_hit=on_hit, tear=tear)
+        applied = _stream_until_crash(model, d, plan)
+        try:
+            # recovery must land on a durable LSN no newer than what the
+            # writer applied, and score bit-equal the oracle there
+            ms2, rep = recover_scorer(compile_ensemble(sch, trees), d)
+            assert 0 <= rep.recovered_lsn <= applied + 1
+            assert ms2.data_version == rep.recovered_lsn
+            _assert_recovered_matches_oracle(ms2, root)
+            # the repaired log accepts a resumed writer at the recovered LSN
+            w = WalWriter(d, sync_every=1, repair=True)
+            assert w.last_lsn == rep.recovered_lsn
+            w.attach(ms2.state)
+            w.close()
+        except Exception:
+            _preserve_wal(d, f"{point}_tear{tear}_hit{on_hit}")
+            raise
+
+
+def test_crash_torn_append_recovers_to_oracle(model):
+    """Tier-1 representative: writer dies mid-append leaving a torn
+    record; recovery discards the tail and matches the oracle."""
+    _check_crash_point(model, "append.write", tear=5)
+
+
+def test_crash_at_sync_recovers_to_oracle(model):
+    _check_crash_point(model, "sync.before", tear=None)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point,tear", CRASH_POINTS)
+@pytest.mark.parametrize("on_hit", [1, 2, 4])
+def test_crash_point_matrix(model, point, tear, on_hit):
+    """Nightly: the exhaustive crash-point × timing matrix."""
+    _check_crash_point(model, point, tear, on_hit=on_hit)
+
+
+@pytest.mark.parametrize("point", CKPT_POINTS)
+def test_crash_during_checkpoint(model, point):
+    """Death at every checkpoint publication step leaves either the old
+    or the new checkpoint fully usable — never a half-published one."""
+    sch, trees = model
+    root = sch.tables[0].name
+    with tempfile.TemporaryDirectory() as wd, \
+            tempfile.TemporaryDirectory() as cd:
+        plan = FaultPlan(crash_at=point)
+        ms = MaintainedScorer(compile_ensemble(sch, trees))
+        w = WalWriter(wd, sync_every=1).attach(ms.state)
+        batches = delta_stream(sch, ms.live_rows, seed=3, n_batches=6,
+                               ops_per_batch=4)
+        for b in batches:
+            ms.apply(b)
+        with pytest.raises(CrashPoint):
+            save_checkpoint(ms.state, cd, fault=plan)
+        w.close()
+        st, lsn, skipped = load_checkpoint(sch, cd)
+        if point == "ckpt.before_rename":
+            assert st is None            # nothing published yet
+        else:
+            assert st is not None and lsn == ms.data_version
+        ms2, rep = recover_scorer(compile_ensemble(sch, trees), wd, cd)
+        assert rep.recovered_lsn == ms.data_version
+        _assert_recovered_matches_oracle(ms2, root)
+
+
+def test_bit_flip_in_tail_discarded(model):
+    """Bit rot in the newest record: the checksum rejects it, recovery
+    stops at the previous LSN and still matches the oracle."""
+    sch, trees = model
+    root = sch.tables[0].name
+    with tempfile.TemporaryDirectory() as d:
+        applied = _stream_until_crash(model, d, plan=None, n_batches=6)
+        flip_tail_bit(wal_path(d), back=3)
+        ms2, rep = recover_scorer(compile_ensemble(sch, trees), d)
+        assert rep.recovered_lsn == applied - 1
+        assert rep.tail_bytes_discarded > 0
+        _assert_recovered_matches_oracle(ms2, root)
+
+
+@pytest.mark.parametrize("cut", [1, 7, 200])
+def test_truncated_tail_discarded(model, cut):
+    """A lost tail sector (any size) rolls back to the last complete
+    record; recovery matches the oracle there."""
+    sch, trees = model
+    root = sch.tables[0].name
+    with tempfile.TemporaryDirectory() as d:
+        applied = _stream_until_crash(model, d, plan=None, n_batches=6)
+        truncate_tail(wal_path(d), cut)
+        ms2, rep = recover_scorer(compile_ensemble(sch, trees), d)
+        assert rep.recovered_lsn < applied
+        _assert_recovered_matches_oracle(ms2, root)
+
+
+def test_corrupt_checkpoint_falls_back_to_older(model):
+    """A bit-rotted newest checkpoint is skipped; recovery loads the
+    previous one and replays a longer tail to the same final LSN."""
+    sch, trees = model
+    root = sch.tables[0].name
+    with tempfile.TemporaryDirectory() as wd, \
+            tempfile.TemporaryDirectory() as cd:
+        ms = MaintainedScorer(compile_ensemble(sch, trees))
+        w = WalWriter(wd, sync_every=1).attach(ms.state)
+        for i, b in enumerate(delta_stream(sch, ms.live_rows, seed=3,
+                                           n_batches=6, ops_per_batch=4)):
+            ms.apply(b)
+            if i in (1, 3):
+                save_checkpoint(ms.state, cd)
+        w.close()
+        newest = latest_checkpoint_lsn(cd)
+        # rot one data file of the newest checkpoint
+        ck = os.path.join(cd, f"ckpt_{newest}")
+        victim = next(p for p in sorted(os.listdir(ck)) if p.endswith(".npy"))
+        flip_tail_bit(os.path.join(ck, victim), back=5)
+        ms2, rep = recover_scorer(compile_ensemble(sch, trees), wd, cd)
+        assert rep.checkpoints_skipped == 1
+        assert rep.checkpoint_lsn < newest
+        assert rep.recovered_lsn == ms.data_version
+        _assert_recovered_matches_oracle(ms2, root)
+
+
+# ----------------------------------------------------- subprocess SIGKILL --
+
+_WRITER_SCRIPT = textwrap.dedent("""
+    import sys
+    from repro.incremental.state import DynamicState
+    from repro.incremental.wal import WalWriter
+    from repro.relational.generators import delta_stream, star_schema
+
+    wal_dir = sys.argv[1]
+    sch = star_schema(seed={seed}, n_fact=100, n_dim=10)
+    state = DynamicState(sch)
+    WalWriter(wal_dir, sync_every=1).attach(state)
+    for batch in delta_stream(sch, state.live_rows, seed=3,
+                              n_batches=100000, ops_per_batch=4):
+        state.apply(batch)
+""").format(seed=SEED)
+
+
+def test_sigkill_writer_mid_stream_recovers_to_oracle(model, tmp_path):
+    """The end-to-end crash smoke: a separate writer process is
+    SIGKILL'd mid-stream (no cleanup, no atexit — exactly a crash);
+    recovery in this process replays its log and bit-equals the oracle
+    at the recovered version."""
+    sch, trees = model
+    root = sch.tables[0].name
+    wal_dir = str(tmp_path / "wal")
+    script = tmp_path / "writer.py"
+    script.write_text(_WRITER_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath("src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.Popen([sys.executable, str(script), wal_dir], env=env,
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.PIPE)
+    try:
+        deadline = time.time() + 120
+        path = wal_path(wal_dir)
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                raise AssertionError(
+                    "writer exited early:\n"
+                    + proc.stderr.read().decode(errors="replace"))
+            try:
+                last, _, _ = scan_wal(path)
+            except Exception:
+                last = 0
+            if last >= 20:
+                break
+            time.sleep(0.05)
+        else:
+            raise AssertionError("writer produced <20 LSNs in 120s")
+    finally:
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGKILL)
+        proc.wait()
+
+    # artifact for CI upload on failure (see .github/workflows)
+    art = os.environ.get("REPRO_WAL_ARTIFACT_DIR")
+    if art:
+        import shutil
+        os.makedirs(art, exist_ok=True)
+        shutil.copy(path, os.path.join(art, "sigkill_wal.log"))
+
+    last, valid_end, size = scan_wal(path)
+    assert last >= 20
+    ms2, rep = recover_scorer(compile_ensemble(sch, trees), wal_dir)
+    assert rep.recovered_lsn == last
+    _assert_recovered_matches_oracle(ms2, root)
+
+    # the recovered store equals a state-only replay of the same log
+    st, rep2 = recover_state(sch, wal_dir)
+    assert rep2.recovered_lsn == rep.recovered_lsn
+    for t, dt in st.tables.items():
+        ours = ms2.state.tables[t]
+        assert np.array_equal(dt.live, ours.live)
+        for c, v in dt.columns.items():
+            assert v.tobytes() == ours.columns[c].tobytes()
